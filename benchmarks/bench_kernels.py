@@ -1,0 +1,76 @@
+"""Kernel-path benchmark: fused Pallas ABFP matmul vs the einsum oracle and
+the scan path, plus allclose validation at benchmark shapes.
+
+On this CPU container the Pallas kernel runs in interpret mode, so absolute
+times are NOT TPU-indicative; the benchmark's value here is (a) correctness
+at realistic shapes and (b) the HBM-traffic accounting (the kernel's reason
+to exist: one read of each operand vs the oracle's (T, M, N) materialization
+— reported as derived bytes).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.abfp import QuantConfig, abfp_matmul
+from repro.kernels.abfp_matmul import abfp_matmul_pallas
+from repro.kernels.ref import abfp_matmul_ref
+
+SHAPES = [(256, 2048, 256), (128, 4096, 512)]
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return out, (time.time() - t0) / reps
+
+
+def run(csv_rows: list) -> dict:
+    results = {}
+    for (m, k, n) in SHAPES:
+        for tile in (32, 128):
+            cfg = QuantConfig(tile_width=tile, gain=8.0, noise_lsb=0.0,
+                              out_dtype=jnp.float32)
+            kx, kw = jax.random.split(jax.random.PRNGKey(0))
+            x = (jax.random.normal(kx, (m, k)) * 0.5).astype(jnp.bfloat16)
+            w = (jax.random.laplace(kw, (k, n)) * 0.05).astype(jnp.bfloat16)
+
+            scan_fn = jax.jit(lambda x, w: abfp_matmul(x, w, cfg))
+            ref_fn = jax.jit(lambda x, w: abfp_matmul_ref(x, w, cfg))
+            ker_fn = jax.jit(lambda x, w: abfp_matmul_pallas(x, w, cfg))
+
+            y_s, t_s = _time(scan_fn, x, w)
+            y_r, t_r = _time(ref_fn, x, w)
+            y_k, t_k = _time(ker_fn, x, w)
+            np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                                       rtol=3e-5, atol=3e-5)
+            np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_r),
+                                       rtol=3e-5, atol=3e-5)
+
+            t_tiles = k // tile
+            # HBM bytes: fused kernel reads each operand once + writes out;
+            # the einsum oracle also materializes (T, M, N) partials twice.
+            fused_bytes = (m * k + k * n) * 2 + m * n * 4
+            oracle_bytes = fused_bytes + 2 * t_tiles * m * n * 4
+            name = f"kernel_m{m}_k{k}_n{n}_t{tile}"
+            csv_rows.append(f"{name}_pallas,{t_k*1e6:.0f},"
+                            f"hbm_bytes={fused_bytes}")
+            csv_rows.append(f"{name}_oracle,{t_r*1e6:.0f},"
+                            f"hbm_bytes={oracle_bytes}")
+            csv_rows.append(f"{name}_scan,{t_s*1e6:.0f},"
+                            f"traffic_ratio={oracle_bytes/fused_bytes:.1f}")
+            results[name] = {"pallas_s": t_k, "oracle_s": t_r, "scan_s": t_s,
+                             "traffic_ratio": oracle_bytes / fused_bytes}
+    return results
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)
+    print("\n".join(rows))

@@ -1,0 +1,49 @@
+"""Serve a small model with batched requests, comparing FLOAT32 serving
+against ABFP-simulated serving (the AMS deployment scenario).
+
+Run:  PYTHONPATH=src python examples/serve_abfp.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.abfp import QuantConfig
+from repro.models import init_params
+from repro.serving import Request, ServingEngine
+
+
+def serve(params, mcfg, quant, label):
+    eng = ServingEngine(params, mcfg, capacity=4, max_len=64, quant=quant)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(1, mcfg.vocab_size, 4).tolist(),
+                    max_new_tokens=6) for i in range(8)]
+    t0 = time.time()
+    done = eng.run(reqs)
+    dt = time.time() - t0
+    toks = {r.uid: r.generated for r in done}
+    print(f"[{label}] {len(done)} requests in {dt:.1f}s ({eng.ticks} ticks)")
+    return toks
+
+
+def main():
+    mcfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), mcfg)
+
+    float_out = serve(params, mcfg, QuantConfig(mode="float"), "float32")
+    abfp_out = serve(
+        params, mcfg,
+        QuantConfig(mode="abfp_ref", tile_width=8, gain=1.0, noise_lsb=0.5),
+        "abfp t8/g1")
+
+    agree = sum(float_out[u] == abfp_out[u] for u in float_out)
+    print(f"\ngreedy outputs identical for {agree}/{len(float_out)} requests "
+          f"at tile 8 / gain 1 (the paper's <1%-loss configuration)")
+    for u in list(float_out)[:3]:
+        print(f"  req {u}: float={float_out[u]}  abfp={abfp_out[u]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro.checkpoint — atomic fault-tolerant checkpointing."""
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    all_steps, latest_step, restore, save, validate)

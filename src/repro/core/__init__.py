@@ -1,0 +1,28 @@
+"""repro.core — the paper's contribution: ABFP numerics, DNF, energy model."""
+
+from repro.core.abfp import (  # noqa: F401
+    FLOAT,
+    QuantConfig,
+    abfp_matmul,
+    abfp_matmul_ste,
+    adc,
+    ams_noise,
+    digital_bfp_matmul,
+    encode_codes,
+    pad_to_tiles,
+    quant_delta,
+    quant_levels,
+    quantize,
+    quantize_input_tiles,
+    quantize_ste,
+    quantize_weight_tiles,
+    safe_scale,
+    tile_scales,
+)
+from repro.core.dnf import (  # noqa: F401
+    NoiseHistogram,
+    capture_differential_noise,
+    inject,
+    select_layers_by_std,
+)
+from repro.core import energy  # noqa: F401

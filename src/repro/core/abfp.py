@@ -1,0 +1,419 @@
+"""Adaptive Block Floating-Point (ABFP) numerics — the paper's core contribution.
+
+Implements, in pure JAX:
+  * the symmetric round-half-even quantizer Q(v; delta, tau)        (Eq. 1)
+  * per-tile adaptive scales s = max|v| stored in BFLOAT16          (Sec. III-A)
+  * the tiled ABFP matmul with per-(row, tile) weight scales and
+    per-(sample, tile) activation scales                            (Eq. 2-4)
+  * gain G applied before the ADC quantizer, divided out after      (Eq. 5-6)
+  * the AMS additive-uniform ADC noise model                        (Eq. 7)
+  * a straight-through-estimator wrapper for QAT                    (Sec. IV-A, Eq. 8)
+
+Scales are computed at runtime ("adaptive"), rounded to ``scale_dtype``
+(BFLOAT16 by default, matching the paper's storage format), and the partial
+dot-product outputs are accumulated in FLOAT32 before the final cast to
+BFLOAT16 (Sec. III: "the final sum is accumulated in FLOAT32").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static configuration of the simulated AMS device.
+
+    Hashable / frozen so it can be closed over by ``jax.jit`` as a static
+    argument.  ``mode`` selects the execution path used by ``repro.kernels.ops``:
+
+      * ``"float"``       — plain (b)f16/f32 matmul, no ABFP (the FLOAT32 baseline)
+      * ``"abfp_ref"``    — pure-jnp scan implementation (this module)
+      * ``"abfp_kernel"`` — fused Pallas TPU kernel (``repro.kernels``)
+    """
+
+    tile_width: int = 128          # n — vector length sharing one scale
+    bits_w: int = 8                # b_W
+    bits_x: int = 8                # b_X
+    bits_y: int = 8                # b_Y (ADC output bits)
+    gain: float = 1.0              # G >= 1, powers of two in the paper
+    noise_lsb: float = 0.0         # ADC noise half-width in output LSBs
+                                   # (paper: 0.5 => E ~ U(-n*dY/2, +n*dY/2))
+    mode: str = "abfp_ref"
+    scale_dtype: Any = jnp.bfloat16
+    out_dtype: Any = jnp.bfloat16
+    accum_dtype: Any = jnp.float32
+    quantize_attention: bool = False  # paper quantizes weight-activation
+                                      # products only; attn score/value
+                                      # contractions optional.
+    scale_percentile: Optional[float] = None
+    # Paper Sec. VI future work: use a measured percentile of |v| instead of
+    # max|v| for the adaptive scale (Wu et al. [29]) — clips outliers into
+    # the tau=1 clamp, buying resolution for the bulk of the distribution.
+    # None = the paper's max-abs scaling.
+
+    def replace(self, **kw) -> "QuantConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def delta_w(self) -> float:
+        return quant_delta(self.bits_w)
+
+    @property
+    def delta_x(self) -> float:
+        return quant_delta(self.bits_x)
+
+    @property
+    def delta_y(self) -> float:
+        return quant_delta(self.bits_y)
+
+    @property
+    def adc_code_scale(self) -> float:
+        """Maps exact integer partial products to ADC code units.
+
+        The analog MAC computes the dot product of the integer operand codes
+        exactly; in code units the ADC (Eq. 5/7) is
+
+            y_code = clamp(round(p_int * adc_code_scale + E_lsb), +-L_y)
+
+        with adc_code_scale = G * d_X * d_W / (n * d_Y) and E_lsb the noise in
+        output LSBs.  Computed in float64 here so every implementation
+        (scan / einsum oracle / Pallas kernel) multiplies by the *same* f32
+        constant and resolves round-half-even ties identically.
+        """
+        return float(
+            self.gain * self.delta_x * self.delta_w
+            / (self.tile_width * self.delta_y)
+        )
+
+    @property
+    def bin_y(self) -> float:
+        """ADC output bin (one LSB): n * delta_y."""
+        return float(self.tile_width * self.delta_y)
+
+
+FLOAT = QuantConfig(mode="float")
+
+
+def quant_delta(bits: int) -> float:
+    """delta_b = 1 / (2**(b-1) - 1): bin size of symmetric signed quantization."""
+    return 1.0 / (2 ** (bits - 1) - 1)
+
+
+def quant_levels(bits: int) -> int:
+    """L_b = 2**(b-1) - 1: largest integer code (symmetric signed)."""
+    return 2 ** (bits - 1) - 1
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1 — the quantizer
+# ---------------------------------------------------------------------------
+
+
+def quantize(v: Array, delta, tau) -> Array:
+    """Q(v; delta, tau) = clamp(round_half_even(v / delta) * delta; +-tau).
+
+    ``jnp.round`` implements round-half-to-even, matching the paper.
+    """
+    return jnp.clip(jnp.round(v / delta) * delta, -tau, tau)
+
+
+# ---------------------------------------------------------------------------
+# Per-tile adaptive scales
+# ---------------------------------------------------------------------------
+
+
+def tile_scales(v_tiles: Array, scale_dtype=jnp.bfloat16,
+                percentile: "Optional[float]" = None) -> Array:
+    """max|v| (or a |v| percentile) over the last axis, rounded to the scale
+    storage dtype.
+
+    ``v_tiles``: (..., n).  Returns (...,) in f32 (value already representable
+    in ``scale_dtype``).  A zero tile gets scale 0 here; callers use
+    ``safe_scale`` to avoid 0/0.
+
+    ``percentile`` (paper Sec. VI future work / Wu et al. [29]): scale by the
+    p-th percentile of |v| instead of the max — outliers saturate into the
+    tau=1 clamp, improving resolution for the rest of the tile.
+    """
+    a = jnp.abs(v_tiles.astype(jnp.float32))
+    if percentile is None or percentile >= 100.0:
+        s = jnp.max(a, axis=-1)
+    else:
+        s = jnp.percentile(a, percentile, axis=-1)
+    # Round to bf16 storage.  bf16(max) may round *down*, pushing |v|/s
+    # slightly above 1; the tau=1 clamp in Eq. 2 absorbs this, exactly as the
+    # hardware's DAC saturation would.
+    return s.astype(scale_dtype).astype(jnp.float32)
+
+
+def safe_scale(s: Array) -> Array:
+    return jnp.where(s == 0.0, 1.0, s)
+
+
+def pad_to_tiles(v: Array, n: int, axis: int) -> Array:
+    """Zero-pad ``axis`` of v up to a multiple of the tile width n."""
+    k = v.shape[axis]
+    rem = (-k) % n
+    if rem == 0:
+        return v
+    pads = [(0, 0)] * v.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(v, pads)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 7 — AMS (ADC) noise
+# ---------------------------------------------------------------------------
+
+
+def ams_noise(key: Array, shape, cfg: QuantConfig) -> Array:
+    """Additive uniform ADC noise E ~ U(-w, +w), w = noise_lsb * (n * delta_y).
+
+    Paper Sec. III-C: the error is one output-quantization bin wide
+    (noise_lsb = 0.5 => +-0.5 LSB, Var = (n*delta_y)^2 / 12) and independent
+    of the operand values.
+    """
+    lsb = cfg.tile_width * cfg.delta_y
+    half_width = cfg.noise_lsb * lsb
+    return jax.random.uniform(
+        key, shape, dtype=jnp.float32, minval=-half_width, maxval=half_width
+    )
+
+
+# ---------------------------------------------------------------------------
+# Weight pre-quantization (Sec. III-A: weights are converted to ABFP once)
+# ---------------------------------------------------------------------------
+
+
+def code_dtype(bits: int):
+    """Storage dtype for integer codes: bf16 when exact (L <= 256, i.e.
+    bits <= 9 — bf16's 8-bit mantissa represents those integers exactly), so
+    the tile dot runs at the MXU's bf16 rate instead of ~1/8 rate f32 (perf
+    iteration, EXPERIMENTS.md §Perf); f32 above that.
+
+    REPRO_ABFP_F32_CODES=1 forces f32 codes (the pre-optimization baseline;
+    used by the §Perf before/after measurement).
+    """
+    import os
+    if os.environ.get("REPRO_ABFP_F32_CODES"):
+        return jnp.float32
+    return jnp.bfloat16 if quant_levels(bits) <= 256 else jnp.float32
+
+
+def encode_codes(v_hat: Array, bits: int) -> Array:
+    """Normalized values -> integer codes in [-L, L].
+
+    round(v_hat * L) == round(v_hat / delta): the DAC encoding of Eq. 2.
+    Integer codes make the tile dot product *exact* under an f32 accumulator
+    (|p| <= n*L_x*L_w = 128*127*127 ~ 2^21 < 2^24 at 8 bits), which is both
+    what the analog MAC array physically computes and what lets three
+    independent implementations resolve ADC round-half-even ties identically.
+    Codes are stored in bf16 when exactly representable (bits <= 9).
+    """
+    lvl = float(quant_levels(bits))
+    return jnp.clip(jnp.round(v_hat * lvl), -lvl, lvl).astype(code_dtype(bits))
+
+
+def quantize_weight_tiles(w: Array, cfg: QuantConfig):
+    """Convert a (K, N) weight matrix into ABFP tiles.
+
+    Returns (w_q, s_w):
+      w_q: (T, n, N) integer weight codes in [-L_w, +L_w] (f32 storage)
+      s_w: (T, N)    per-(tile, output) scales, bf16-rounded, f32 dtype
+
+    The quantized *value* lattice of Eq. 2 is ``w_q * delta_w * s_w``.
+    """
+    n = cfg.tile_width
+    w = pad_to_tiles(w.astype(jnp.float32), n, axis=0)
+    kp = w.shape[0]
+    t = kp // n
+    wt = w.reshape(t, n, w.shape[1])                       # (T, n, N)
+    s_w = tile_scales(jnp.moveaxis(wt, 1, -1), cfg.scale_dtype,
+                      cfg.scale_percentile)              # (T, N)
+    w_hat = wt / safe_scale(s_w)[:, None, :]
+    w_q = encode_codes(w_hat, cfg.bits_w)
+    return w_q, s_w
+
+
+def quantize_input_tiles(x: Array, cfg: QuantConfig):
+    """Convert (..., K) activations into ABFP tiles.
+
+    Returns (x_q, s_x):
+      x_q: (..., T, n) integer activation codes in [-L_x, +L_x] (f32 storage)
+      s_x: (..., T)    per-(sample, tile) scales
+    """
+    n = cfg.tile_width
+    x = pad_to_tiles(x.astype(jnp.float32), n, axis=-1)
+    t = x.shape[-1] // n
+    xt = x.reshape(*x.shape[:-1], t, n)                    # (..., T, n)
+    s_x = tile_scales(xt, cfg.scale_dtype, cfg.scale_percentile)  # (..., T)
+    x_hat = xt / safe_scale(s_x)[..., None]
+    x_q = encode_codes(x_hat, cfg.bits_x)
+    return x_q, s_x
+
+
+def adc(p_codes: Array, cfg: QuantConfig, noise_lsb_draw: Optional[Array] = None) -> Array:
+    """Eq. 5/7 in code units: the ADC conversion of an exact integer partial
+    product.  Returns output codes in [-L_y, +L_y]; the represented value is
+    ``codes * bin_y`` (bin_y = n*delta_y, clamp tau_Y = n).
+    """
+    scale = jnp.float32(cfg.adc_code_scale)
+    v = p_codes * scale
+    if noise_lsb_draw is not None:
+        v = v + noise_lsb_draw
+    lvl = float(quant_levels(cfg.bits_y))
+    return jnp.clip(jnp.round(v), -lvl, lvl)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2-7 — the tiled ABFP matmul (scan over K tiles: O(M*N) live memory)
+# ---------------------------------------------------------------------------
+
+
+def abfp_matmul(
+    x: Array,
+    w: Array,
+    cfg: QuantConfig,
+    key: Optional[Array] = None,
+) -> Array:
+    """y = ABFP(x @ w) with x: (..., K), w: (K, N) -> (..., N).
+
+    Pure-jnp production path (``mode="abfp_ref"``).  Scans over the K tiles so
+    the (T, M, N) partial-product tensor is never materialized; each scan step
+    simulates one analog tile dot product:
+
+        y_q[t] = Q(G * (x_q[t] . w_q[t]) + E; n*delta_y, tau_y = n)   (Eq. 7)
+        y     += y_q[t] * s_x[t] * s_w[t] / G                         (Eq. 6)
+    """
+    if key is None and cfg.noise_lsb > 0.0:
+        raise ValueError("noise_lsb > 0 requires a PRNG key")
+
+    batch_shape = x.shape[:-1]
+    k_in, n_out = w.shape
+    x2 = x.reshape(-1, x.shape[-1])
+    m = x2.shape[0]
+
+    x_q, s_x = quantize_input_tiles(x2, cfg)      # (M, T, n), (M, T)
+    w_q, s_w = quantize_weight_tiles(w, cfg)      # (T, n, N), (T, N)
+    t = w_q.shape[0]
+
+    gain = jnp.float32(cfg.gain)
+    bin_y = jnp.float32(cfg.bin_y)                # n * delta_y
+
+    noisy = cfg.noise_lsb > 0.0
+    if noisy:
+        keys = jax.random.split(key, t)
+    else:
+        keys = jnp.zeros((t, 2), dtype=jnp.uint32)
+
+    # XLA:CPU's small-dot emitter lacks a bf16 path (hit by eager tests at
+    # tiny shapes); upcast codes there.  On TPU the bf16 codes feed the MXU
+    # directly — values are identical either way (codes are exact integers).
+    upcast = jax.default_backend() == "cpu"
+
+    def step(acc, operand):
+        xq_t, sx_t, wq_t, sw_t, key_t = operand
+        if upcast:
+            xq_t = xq_t.astype(jnp.float32)
+            wq_t = wq_t.astype(jnp.float32)
+        # Exact integer partial dot product (the analog MAC array output).
+        p = jnp.dot(xq_t, wq_t, preferred_element_type=jnp.float32)  # (M, N)
+        if noisy:
+            e = jax.random.uniform(
+                key_t, p.shape, jnp.float32,
+                minval=-cfg.noise_lsb, maxval=cfg.noise_lsb)
+        else:
+            e = None
+        y_q = adc(p, cfg, e) * bin_y                                 # Eq. 7
+        acc = acc + y_q * (sx_t[:, None] * sw_t[None, :]) / gain     # Eq. 6
+        return acc, None
+
+    acc0 = jnp.zeros((m, n_out), dtype=cfg.accum_dtype)
+    xs = (
+        jnp.moveaxis(x_q, -2, 0),   # (T, M, n)
+        jnp.moveaxis(s_x, -1, 0),   # (T, M)
+        w_q,                        # (T, n, N)
+        s_w,                        # (T, N)
+        keys,
+    )
+    acc, _ = jax.lax.scan(step, acc0, xs)
+    return acc.reshape(*batch_shape, n_out).astype(cfg.out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sec. IV-A — QAT: straight-through estimator (Eq. 8)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def abfp_matmul_ste(x: Array, w: Array, cfg: QuantConfig, key: Optional[Array] = None) -> Array:
+    """ABFP forward, straight-through backward (gradients of the plain matmul).
+
+    Eq. 8: dL/dx = dL/dy . W^T, dL/dW = x^T . dL/dy — accumulated in FLOAT32.
+    """
+    return abfp_matmul(x, w, cfg, key)
+
+
+def _ste_fwd(x, w, cfg, key):
+    return abfp_matmul(x, w, cfg, key), (x, w)
+
+
+def _ste_bwd(cfg, res, g):
+    x, w = res
+    g32 = g.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    dx = jnp.matmul(g32, w32.T).astype(x.dtype)
+    g2 = g32.reshape(-1, g32.shape[-1])
+    x2 = x32.reshape(-1, x32.shape[-1])
+    dw = jnp.matmul(x2.T, g2).astype(w.dtype)
+    return dx, dw, None  # no gradient w.r.t. the PRNG key
+
+
+abfp_matmul_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def quantize_ste(v: Array, delta, tau) -> Array:
+    """Elementwise STE quantizer: forward Q(v), backward identity."""
+    q = quantize(jax.lax.stop_gradient(v), delta, tau)
+    return v + jax.lax.stop_gradient(q - v)
+
+
+# ---------------------------------------------------------------------------
+# Digital fixed-point aside (Sec. III-A): accumulate-then-quantize
+# ---------------------------------------------------------------------------
+
+
+def digital_bfp_matmul(x: Array, w: Array, cfg: QuantConfig) -> Array:
+    """The *digital* accelerator ordering (the paper's aside under Eq. 4).
+
+    A digital fixed-point device keeps a wide accumulator
+    (b_W + b_X + log2(n) + log2(T) bits fit comfortably in int32), so the
+    summation across tiles happens BEFORE any output quantization: the only
+    quantization error is the input/weight rounding.  An AMS device must pass
+    every tile's partial product through the b_Y-bit ADC (Eq. 3), which is why
+    it suffers more quantization error.  Used by tests/benchmarks to reproduce
+    that claim quantitatively.
+    """
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    x_q, s_x = quantize_input_tiles(x2, cfg)
+    w_q, s_w = quantize_weight_tiles(w, cfg)
+    # Exact partial products, rescaled and accumulated with no ADC in the loop.
+    p = jnp.einsum("mtn,tno->tmo", x_q, w_q,
+                   preferred_element_type=jnp.float32)
+    dd = jnp.float32(float(cfg.delta_x * cfg.delta_w))
+    y = jnp.einsum("tmo,mt,to->mo", p * dd, s_x, s_w)
+    return y.reshape(*batch_shape, w.shape[1]).astype(cfg.out_dtype)

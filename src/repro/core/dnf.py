@@ -1,0 +1,146 @@
+"""Differential Noise Finetuning (DNF) — paper Sec. IV-B.
+
+DNF keeps the forward pass in FLOAT32/BFLOAT16 and adds, to each layer
+output, noise sampled from a histogram of the *differential noise*
+
+    dy^l = ABFP_layer^l(x^l) - FLOAT_layer^l(x^l)
+
+captured ONCE before finetuning on a single batch, with both layers fed the
+same FLOAT32 input (the previous FLOAT layer's output).  Histograms use the
+paper's recipe: 100 bins, +0.5 smoothing of every bin count to avoid zero
+probabilities.
+
+The per-layer histograms are stored as stacked arrays so they can be indexed
+inside a ``jax.lax.scan`` over layers, and sampling is inverse-CDF
+(searchsorted) + uniform-within-bin — O(log bins) per draw, jit-friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+NUM_BINS_DEFAULT = 100
+SMOOTHING_DEFAULT = 0.5
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class NoiseHistogram:
+    """Smoothed histogram distribution(s) of differential noise.
+
+    Supports a leading "layer" axis: ``edges (L, B+1)``, ``cum (L, B)`` so a
+    stacked histogram can be carried through scan-over-layers and indexed with
+    the loop counter.  Also stores per-layer mean/std for the paper's Fig. 5
+    style layer-susceptibility analysis.
+    """
+
+    edges: Array   # (..., B+1) bin edges
+    cum: Array     # (..., B)   cumulative probabilities, last value == 1
+    mean: Array    # (...)      mean of the raw differential noise
+    std: Array     # (...)      std  of the raw differential noise
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.edges, self.cum, self.mean, self.std), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def fit(
+        cls,
+        samples: Array,
+        num_bins: int = NUM_BINS_DEFAULT,
+        smoothing: float = SMOOTHING_DEFAULT,
+    ) -> "NoiseHistogram":
+        """Fit a single histogram to a sample tensor (flattened)."""
+        s = np.asarray(samples, dtype=np.float32).ravel()
+        s = s[np.isfinite(s)]
+        if s.size == 0:
+            s = np.zeros((1,), np.float32)
+        lo, hi = float(s.min()), float(s.max())
+        if lo == hi:  # degenerate: widen so sampling returns ~ the constant
+            pad = max(1e-6, 1e-4 * abs(lo))
+            lo, hi = lo - pad, hi + pad
+        counts, edges = np.histogram(s, bins=num_bins, range=(lo, hi))
+        probs = (counts + smoothing) / (counts.sum() + smoothing * num_bins)
+        cum = np.cumsum(probs)
+        cum[-1] = 1.0
+        return cls(
+            edges=jnp.asarray(edges),
+            cum=jnp.asarray(cum, dtype=jnp.float32),
+            mean=jnp.asarray(s.mean(), dtype=jnp.float32),
+            std=jnp.asarray(s.std(), dtype=jnp.float32),
+        )
+
+    @classmethod
+    def stack(cls, hists: list["NoiseHistogram"]) -> "NoiseHistogram":
+        """Stack per-layer histograms along a leading axis (for lax.scan)."""
+        return cls(
+            edges=jnp.stack([h.edges for h in hists]),
+            cum=jnp.stack([h.cum for h in hists]),
+            mean=jnp.stack([h.mean for h in hists]),
+            std=jnp.stack([h.std for h in hists]),
+        )
+
+    def layer(self, idx) -> "NoiseHistogram":
+        return NoiseHistogram(
+            edges=self.edges[idx], cum=self.cum[idx],
+            mean=self.mean[idx], std=self.std[idx],
+        )
+
+    # -- sampling (Eq. 9) ----------------------------------------------------
+    def sample(self, key: Array, shape) -> Array:
+        """Inverse-CDF sampling: xi ~ P_hist."""
+        k1, k2 = jax.random.split(key)
+        u = jax.random.uniform(k1, shape, dtype=jnp.float32)
+        idx = jnp.searchsorted(self.cum, u, side="left")
+        idx = jnp.clip(idx, 0, self.cum.shape[-1] - 1)
+        lo = self.edges[idx]
+        hi = self.edges[idx + 1]
+        frac = jax.random.uniform(k2, shape, dtype=jnp.float32)
+        return lo + (hi - lo) * frac
+
+
+def capture_differential_noise(
+    float_out: Array,
+    abfp_out: Array,
+    num_bins: int = NUM_BINS_DEFAULT,
+    smoothing: float = SMOOTHING_DEFAULT,
+) -> NoiseHistogram:
+    """dy = ABFP(x) - FLOAT(x) for one layer, fitted to a histogram.
+
+    Both outputs must come from the SAME input (the previous FLOAT layer's
+    output) — the framework's paired-capture mode guarantees this.
+    """
+    dy = np.asarray(abfp_out, np.float32) - np.asarray(float_out, np.float32)
+    return NoiseHistogram.fit(dy, num_bins=num_bins, smoothing=smoothing)
+
+
+def inject(y: Array, hist: Optional[NoiseHistogram], key: Optional[Array]) -> Array:
+    """Eq. 9: y^l = f^l(x^l) + xi^l,  xi^l ~ P_hist^l (no-op when hist is None)."""
+    if hist is None:
+        return y
+    xi = hist.sample(key, y.shape).astype(y.dtype)
+    return y + xi
+
+
+def select_layers_by_std(
+    hists: list[NoiseHistogram], top_fraction: float
+) -> list[bool]:
+    """Paper Sec. V-B: restrict injection to the layers with the highest
+    differential-noise std (higher variance = more susceptible), which is how
+    the paper tailors DNF to SSD-ResNet34 to cut sampling overhead."""
+    stds = np.array([float(h.std) for h in hists])
+    k = max(1, int(round(top_fraction * len(hists))))
+    thresh = np.sort(stds)[-k]
+    return [bool(s >= thresh) for s in stds]

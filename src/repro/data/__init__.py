@@ -1,0 +1,2 @@
+"""repro.data — deterministic synthetic pipeline."""
+from repro.data.synthetic import DataConfig, SyntheticDataset, batch_at_step  # noqa: F401

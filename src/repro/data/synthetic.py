@@ -1,0 +1,80 @@
+"""Deterministic synthetic LM data pipeline.
+
+A learnable next-token task with real structure (so finetuning experiments
+have signal): tokens follow a sparse random Markov chain over the vocab,
+generated counter-based from (seed, step, shard) — any step's batch can be
+recomputed exactly on any host, which is what makes checkpoint-resume and
+elastic re-sharding deterministic with *no* data-state file.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    branching: int = 4      # successors per token in the Markov chain
+
+
+def _transition_table(cfg: DataConfig) -> np.ndarray:
+    """(vocab, branching) successor table — the task's hidden structure."""
+    rng = np.random.default_rng(cfg.seed + 7)
+    return rng.integers(0, cfg.vocab_size,
+                        size=(cfg.vocab_size, cfg.branching), dtype=np.int32)
+
+
+def batch_at_step(cfg: DataConfig, step: int,
+                  table: Optional[np.ndarray] = None) -> dict:
+    """Counter-based batch: {tokens (B, S+1)} for step ``step``.
+
+    tokens[:, :-1] are inputs, tokens[:, 1:] are labels.  Branch choice is
+    geometric-skewed (p ~ 2^-i) so the task has a learnable optimum well
+    above chance: a perfect model picks branch 0 (~53% accuracy at b=4)
+    instead of 1/branching.
+    """
+    if table is None:
+        table = _transition_table(cfg)
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    k0, kb = jax.random.split(key)
+    b, s = cfg.global_batch, cfg.seq_len
+    start = jax.random.randint(k0, (b,), 0, cfg.vocab_size, dtype=jnp.int32)
+    logits = -jnp.arange(cfg.branching, dtype=jnp.float32) * jnp.log(2.0)
+    branch = jax.random.categorical(kb, logits, shape=(b, s)).astype(jnp.int32)
+    tbl = jnp.asarray(table)
+
+    def step_fn(tok, br):
+        nxt = tbl[tok, br]
+        return nxt, nxt
+
+    _, seqs = jax.lax.scan(step_fn, start, branch.T)
+    tokens = jnp.concatenate([start[:, None], seqs.T], axis=1)  # (B, S+1)
+    return {"tokens": tokens}
+
+
+class SyntheticDataset:
+    """Iterator facade with explicit step state (resumable)."""
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0):
+        self.cfg = cfg
+        self.step = start_step
+        self._table = _transition_table(cfg)
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        batch = batch_at_step(self.cfg, self.step, self._table)
+        self.step += 1
+        return batch

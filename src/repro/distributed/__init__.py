@@ -1,0 +1,3 @@
+"""repro.distributed — sharding rules, collectives, fault tolerance."""
+
+from repro.distributed import collectives, fault, sharding  # noqa: F401

@@ -1,0 +1,93 @@
+"""Distributed-optimization tricks: gradient compression + overlap notes.
+
+Gradient compression for the data-parallel all-reduce:
+  * ``bf16``  — halve DP gradient traffic (safe default at LM scale).
+  * ``int8``  — 4x reduction with per-tensor scale and *error feedback*
+    (the residual of the quantization is carried into the next step so the
+    compression is unbiased over time — standard EF-SGD construction).
+
+Under pjit/GSPMD the all-reduce is implicit in the sharded grad computation;
+compression is therefore expressed as a (compress -> all-reduce-width) pair
+around the optimizer boundary: cast/quantize the grads *before* they cross
+the data axis.  The helpers are pure pytree transforms and compose with any
+optimizer in ``repro.optim``.
+
+Compute/communication overlap: with scan-over-layers, XLA's latency-hiding
+scheduler overlaps the per-layer reduce-scatter with the next layer's
+backward matmuls automatically once grads are bucketed per scan step — which
+the stacked-parameter layout already provides (one fused collective per
+leaf, pipelined across scan iterations).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Pytree     # f32 compression residuals (same structure as grads)
+
+
+def init_error_feedback(params: Pytree) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress_bf16(grads: Pytree) -> Pytree:
+    """Cast-compress: the all-reduce runs at half width."""
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads: Pytree) -> Pytree:
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+def compress_int8_ef(
+    grads: Pytree, ef: ErrorFeedbackState
+) -> Tuple[Pytree, Pytree, ErrorFeedbackState]:
+    """int8 + per-tensor scale + error feedback.
+
+    Returns (q_grads int8, scales f32, new_ef).  The residual
+    (g + r) - dequant(q) is carried to the next step.
+    """
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        new_r = g - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    qs, scales, residuals = [], [], []
+    leaves, treedef = jax.tree.flatten(grads)
+    ef_leaves = jax.tree.leaves(ef.residual)
+    for g, r in zip(leaves, ef_leaves):
+        q, s, nr = one(g, r)
+        qs.append(q)
+        scales.append(s)
+        residuals.append(nr)
+    unflat = lambda xs: jax.tree.unflatten(treedef, xs)  # noqa: E731
+    return unflat(qs), unflat(scales), ErrorFeedbackState(unflat(residuals))
+
+
+def decompress_int8(q_grads: Pytree, scales: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, q_grads, scales)
+
+
+def apply_compression(grads: Pytree, method: Optional[str],
+                      ef: Optional[ErrorFeedbackState] = None):
+    """One-call wrapper used by the train step.  Returns (grads, new_ef)."""
+    if method is None or method == "none":
+        return grads, ef
+    if method == "bf16":
+        return decompress_bf16(compress_bf16(grads)), ef
+    if method == "int8":
+        assert ef is not None
+        q, s, new_ef = compress_int8_ef(grads, ef)
+        return decompress_int8(q, s), new_ef
+    raise ValueError(f"unknown compression {method!r}")

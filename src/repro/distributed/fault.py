@@ -1,0 +1,100 @@
+"""Fault tolerance + straggler mitigation + elastic scaling policy.
+
+The single-process container can't kill real hosts, so this module provides
+the *policy machinery* the launcher runs, with the host-failure signal
+injectable (tests inject synthetic failures; a real deployment wires
+``jax.monitoring``/GCS health checks into the same hooks):
+
+  * ``RestartPolicy``   — crash-loop-aware resume decision: restore the
+    newest *valid* checkpoint (corrupt ones are skipped by
+    ``checkpoint.restore``), with bounded restarts per time window.
+  * ``StragglerMonitor``— per-step deadline from a trailing-median model;
+    steps exceeding ``k * median`` are flagged, and the policy escalates:
+    log -> re-slice (skip straggling host's shard next step) -> checkpoint &
+    re-mesh without it (elastic down-scale).
+  * ``ElasticPlan``     — given a lost-host count, choose the largest valid
+    (data, model) mesh that the remaining chips support and report the
+    resharding plan; checkpoints are logical-layout so the restore path in
+    ``repro.checkpoint`` already handles the move.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 5
+    window_sec: float = 3600.0
+    _restarts: List[float] = dataclasses.field(default_factory=list)
+
+    def should_restart(self, now: Optional[float] = None) -> bool:
+        now = time.monotonic() if now is None else now
+        self._restarts = [t for t in self._restarts
+                          if now - t < self.window_sec]
+        if len(self._restarts) >= self.max_restarts:
+            return False            # crash loop: surface to operator
+        self._restarts.append(now)
+        return True
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Trailing-median step-time model with a k-times deadline."""
+
+    k: float = 3.0
+    history: int = 32
+    _times: List[float] = dataclasses.field(default_factory=list)
+    flagged: int = 0
+
+    def deadline(self) -> Optional[float]:
+        if len(self._times) < 5:
+            return None
+        s = sorted(self._times)
+        return self.k * s[len(s) // 2]
+
+    def observe(self, step_time: float) -> bool:
+        """Record a step; returns True if it breached the deadline."""
+        d = self.deadline()
+        breach = d is not None and step_time > d
+        self._times.append(step_time)
+        self._times = self._times[-self.history:]
+        if breach:
+            self.flagged += 1
+        return breach
+
+    def escalation(self) -> str:
+        """log -> reslice -> remesh as breaches accumulate."""
+        if self.flagged <= 2:
+            return "log"
+        if self.flagged <= 5:
+            return "reslice"
+        return "remesh"
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_shape: tuple
+    new_shape: tuple
+    lost_hosts: int
+
+    @property
+    def changed(self) -> bool:
+        return self.old_shape != self.new_shape
+
+
+def plan_elastic_mesh(chips_available: int, model_parallel: int,
+                      old_shape: tuple) -> ElasticPlan:
+    """Largest (data, model) mesh under the surviving chip count, holding the
+    model axis fixed (weights' TP layout is the expensive one to move)."""
+    data = chips_available // model_parallel
+    if data < 1:
+        raise RuntimeError(
+            f"{chips_available} chips cannot hold model_parallel="
+            f"{model_parallel}")
+    new_shape = (data, model_parallel)
+    lost = int((old_shape[0] * old_shape[1] - chips_available))
+    return ElasticPlan(tuple(old_shape), new_shape, max(lost, 0))

@@ -1,0 +1,245 @@
+"""Fused ABFP tiled-matmul Pallas TPU kernel.
+
+The compute hot-spot of ABFP simulation.  A naive XLA implementation either
+materializes the (T, M, N) per-tile partial-product tensor in HBM (T = K/n —
+a 64x blow-up at K=8192, n=128; 512x at n=8) or re-reads the operands T
+times.  This kernel keeps everything tile-local in VMEM:
+
+  grid = (M/bm, N/bn, K/bk), K innermost ("arbitrary" semantics).
+  Each step loads x_blk (bm, bk) and w_blk (bk, bn), splits the K block into
+  tk = bk/n ABFP tiles, and per tile:
+
+    s_x = max|x_tile|  (bf16-rounded)          s_w = max|w_tile|
+    x_q = Q(x/s_x; d_X, 1)                     w_q = Q(w/s_w; d_W, 1)
+    p   = x_q . w_q                 (MXU batched dot over the tk tiles)
+    y_q = Q(G*p + E; n*d_Y, n)      (ADC with gain and uniform noise)
+    acc += y_q * s_x * s_w / G      (FLOAT32 accumulator in VMEM scratch)
+
+  The accumulator is written to HBM once, as BFLOAT16, on the last K step.
+
+AMS noise uses a counter-based murmur3-style hash PRNG (seed, program ids,
+tile index) -> uniform, identical under `interpret=True` on CPU and compiled
+TPU execution, so the oracle comparison and noise statistics are testable in
+this container.
+
+TPU adaptation note (DESIGN.md §2): the paper's analog device processes one
+n-wide tile per clock; here tk tiles are batched into one MXU dot_general so
+small n (8/32) still feeds the 128x128 systolic array efficiently — the tile
+*semantics* (per-tile ADC quantization) are preserved exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.abfp import QuantConfig
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def default_bk(n: int, k: int) -> int:
+    """K-block: multiple of the ABFP tile width, capped to bound VMEM.
+
+    tk = bk/n partial products of (bm, bn) f32 live in VMEM: at bm=bn=128,
+    bk=512 -> tk*64KiB <= 4 MiB (n=8 uses bk=256 -> 2 MiB).
+    """
+    cap = 256 if n <= 8 else 512
+    bk = min(cap, max(n, k))
+    return max(n, (bk // n) * n)
+
+
+# ---------------------------------------------------------------------------
+# Counter-based uniform PRNG (murmur3 finalizer lattice hash)
+# ---------------------------------------------------------------------------
+
+
+def _hash_uniform(shape, seed, salt):
+    """Deterministic uniform [0, 1) lattice: hash(row, col, seed, salt)."""
+    r = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    x = (
+        r * jnp.uint32(0x9E3779B9)
+        + c * jnp.uint32(0x85EBCA6B)
+        + seed.astype(jnp.uint32) * jnp.uint32(0xC2B2AE35)
+        + salt.astype(jnp.uint32) * jnp.uint32(0x27D4EB2F)
+    )
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return (x >> 8).astype(jnp.float32) / jnp.float32(1 << 24)
+
+
+# ---------------------------------------------------------------------------
+# Kernel body
+# ---------------------------------------------------------------------------
+
+
+def _abfp_matmul_kernel(
+    seed_ref,  # SMEM (1,) int32
+    x_ref,     # VMEM (bm, bk)
+    w_ref,     # VMEM (bk, bn)
+    o_ref,     # VMEM (bm, bn)
+    acc_ref,   # VMEM scratch (bm, bn) f32
+    *,
+    cfg: QuantConfig,
+    tk: int,
+    n: int,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bm, bk = x_ref.shape
+    bn = w_ref.shape[1]
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+
+    xt = x.reshape(bm, tk, n)                       # (bm, tk, n)
+    wt = w.reshape(tk, n, bn)                       # (tk, n, bn)
+
+    # Adaptive per-tile scales, stored in bf16 (paper Sec. III).
+    sx = jnp.max(jnp.abs(xt), axis=2)               # (bm, tk)
+    sw = jnp.max(jnp.abs(wt), axis=1)               # (tk, bn)
+    sx = sx.astype(cfg.scale_dtype).astype(jnp.float32)
+    sw = sw.astype(cfg.scale_dtype).astype(jnp.float32)
+    sx_safe = jnp.where(sx == 0.0, 1.0, sx)
+    sw_safe = jnp.where(sw == 0.0, 1.0, sw)
+
+    # Eq. 2: normalize and encode operands as integer codes (DAC).
+    lx = jnp.float32(2 ** (cfg.bits_x - 1) - 1)
+    lw = jnp.float32(2 ** (cfg.bits_w - 1) - 1)
+    xq = jnp.clip(jnp.round(xt / sx_safe[:, :, None] * lx), -lx, lx)
+    wq = jnp.clip(jnp.round(wt / sw_safe[:, None, :] * lw), -lw, lw)
+    # bf16 codes are exact for <= 9-bit operands and feed the MXU at its
+    # bf16 rate (vs ~1/8 rate for f32) — see core.abfp.code_dtype.
+    from repro.core.abfp import code_dtype
+    cdt = code_dtype(max(cfg.bits_x, cfg.bits_w))
+    xq = xq.astype(cdt)
+    wq = wq.astype(cdt)
+
+    # Batched MXU dot over the tk tiles: (tk, bm, n) @ (tk, n, bn).
+    # Integer-valued operands: the f32-accumulated dot is EXACT
+    # (|p| <= n*L_x*L_w < 2^24 at 8 bits), matching the analog MAC array and
+    # the jnp oracle bit-for-bit.
+    p = jax.lax.dot_general(
+        xq.transpose(1, 0, 2),
+        wq,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                               # (tk, bm, bn)
+
+    # Eq. 5/7: the ADC in code units — same fused f32 constant as the oracle
+    # so round-half-even ties resolve identically.
+    v = p * jnp.float32(cfg.adc_code_scale)
+    if cfg.noise_lsb > 0.0:
+        # One independent uniform noise draw per partial output, in LSB units.
+        salt = (i * pl.num_programs(1) + j) * nk + k
+        u = _hash_uniform(
+            (tk * bm, bn),
+            seed_ref[0],
+            jnp.uint32(salt),
+        ).reshape(tk, bm, bn)
+        v = v + (u - 0.5) * jnp.float32(2.0 * cfg.noise_lsb)
+    ly = jnp.float32(2 ** (cfg.bits_y - 1) - 1)
+    yq = jnp.clip(jnp.round(v), -ly, ly) * jnp.float32(cfg.bin_y)
+
+    # Eq. 6: rescale partials and accumulate in FLOAT32.
+    contrib = jnp.sum(
+        yq * sx.T[:, :, None] * sw[:, None, :], axis=0
+    ) / jnp.float32(cfg.gain)                        # (bm, bn)
+    acc_ref[...] += contrib
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Host-side wrapper
+# ---------------------------------------------------------------------------
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "bm", "bn", "bk", "interpret")
+)
+def abfp_matmul_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: QuantConfig,
+    seed: Optional[jax.Array] = None,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """y = ABFP(x @ w); x: (..., K), w: (K, N) -> (..., N) in cfg.out_dtype.
+
+    ``seed``: int32 scalar seeding the in-kernel noise hash (required when
+    cfg.noise_lsb > 0).  ``interpret`` defaults to True off-TPU so the same
+    call validates on CPU and runs compiled on TPU.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = cfg.tile_width
+    if bk is None:
+        bk = default_bk(n, x.shape[-1])
+    assert bk % n == 0, (bk, n)
+
+    batch_shape = x.shape[:-1]
+    k_dim, n_dim = w.shape
+    x2 = x.reshape(-1, k_dim).astype(jnp.float32)
+    m_dim = x2.shape[0]
+
+    mp, kp, np_ = _ceil_to(m_dim, bm), _ceil_to(k_dim, bk), _ceil_to(n_dim, bn)
+    x2 = jnp.pad(x2, ((0, mp - m_dim), (0, kp - k_dim)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k_dim), (0, np_ - n_dim)))
+
+    if seed is None:
+        if cfg.noise_lsb > 0.0:
+            raise ValueError("noise_lsb > 0 requires a seed")
+        seed = jnp.zeros((1,), jnp.int32)
+    else:
+        seed = jnp.asarray(seed, jnp.int32).reshape((1,))
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    tk = bk // n
+
+    kernel = functools.partial(_abfp_matmul_kernel, cfg=cfg, tk=tk, n=n)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # seed
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),        # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),        # w
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), cfg.out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(seed, x2, wp)
+
+    return out[:m_dim, :n_dim].reshape(*batch_shape, n_dim)

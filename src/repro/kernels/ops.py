@@ -1,0 +1,65 @@
+"""Unified dense-matmul dispatch: the single entry point models use.
+
+``dense(x, w, cfg, key)`` routes to:
+  * ``mode="float"``       — plain matmul in the operand dtype (FLOAT baseline)
+  * ``mode="abfp_ref"``    — pure-jnp scan ABFP (core.abfp.abfp_matmul)
+  * ``mode="abfp_kernel"`` — fused Pallas kernel (abfp_matmul_pallas)
+
+All ABFP modes carry the straight-through estimator (paper Eq. 8): the
+backward pass is that of the plain matmul, accumulated in FLOAT32 — this is
+what makes the same call usable for inference simulation AND for QAT.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abfp import QuantConfig, abfp_matmul
+from repro.kernels.abfp_matmul import abfp_matmul_pallas
+
+
+def _key_to_seed(key: Optional[jax.Array]) -> Optional[jax.Array]:
+    """Fold a jax PRNG key into the int32 seed the Pallas hash PRNG expects."""
+    if key is None:
+        return None
+    data = jax.random.key_data(key).astype(jnp.uint32)
+    return jnp.bitwise_xor(data[..., 0], data[..., -1]).astype(jnp.int32)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def dense(x: jax.Array, w: jax.Array, cfg: QuantConfig,
+          key: Optional[jax.Array] = None) -> jax.Array:
+    """x (..., K) @ w (K, N) -> (..., N) under the QuantConfig's mode."""
+    return _dense_fwd_impl(x, w, cfg, key)
+
+
+def _dense_fwd_impl(x, w, cfg, key):
+    if cfg.mode == "float":
+        return jnp.matmul(x, w.astype(x.dtype))
+    if cfg.mode == "abfp_ref":
+        return abfp_matmul(x, w, cfg, key)
+    if cfg.mode == "abfp_kernel":
+        return abfp_matmul_pallas(x, w, cfg, _key_to_seed(key))
+    raise ValueError(f"unknown quant mode: {cfg.mode!r}")
+
+
+def _dense_fwd(x, w, cfg, key):
+    return _dense_fwd_impl(x, w, cfg, key), (x, w)
+
+
+def _dense_bwd(cfg, res, g):
+    # STE (Eq. 8): gradients of the un-quantized matmul, FLOAT32 accumulation.
+    x, w = res
+    g32 = g.astype(jnp.float32)
+    dx = jnp.matmul(g32, w.astype(jnp.float32).T).astype(x.dtype)
+    g2 = g32.reshape(-1, g32.shape[-1])
+    x2 = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+    dw = jnp.matmul(x2.T, g2).astype(w.dtype)
+    return dx, dw, None
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

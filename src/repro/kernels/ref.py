@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the ABFP matmul kernel.
+
+Independent of ``repro.core.abfp``'s scan implementation: materializes the
+full (T, M, N) partial-product tensor with one einsum, applies the ADC model,
+and contracts against the scales.  Only suitable for test-sized shapes; the
+production paths are ``core.abfp.abfp_matmul`` (scan) and the fused Pallas
+kernel (``abfp_matmul.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abfp import (
+    QuantConfig,
+    adc,
+    quantize_input_tiles,
+    quantize_weight_tiles,
+)
+
+
+def abfp_matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: QuantConfig,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Oracle ABFP matmul: x (..., K) @ w (K, N) -> (..., N)."""
+    if key is None and cfg.noise_lsb > 0.0:
+        raise ValueError("noise_lsb > 0 requires a PRNG key")
+
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+
+    x_q, s_x = quantize_input_tiles(x2, cfg)   # (M, T, n) codes, (M, T)
+    w_q, s_w = quantize_weight_tiles(w, cfg)   # (T, n, N) codes, (T, N)
+    t = w_q.shape[0]
+    m = x2.shape[0]
+    n_out = w.shape[1]
+
+    # Exact integer partial dot products (the analog MAC array output).
+    p = jnp.einsum(
+        "mtn,tno->tmo", x_q, w_q, preferred_element_type=jnp.float32
+    )  # (T, M, N)
+
+    if cfg.noise_lsb > 0.0:
+        keys = jax.random.split(key, t)
+        e = jax.vmap(
+            lambda k: jax.random.uniform(
+                k, (m, n_out), jnp.float32,
+                minval=-cfg.noise_lsb, maxval=cfg.noise_lsb)
+        )(keys)
+    else:
+        e = None
+
+    y_q = adc(p, cfg, e) * jnp.float32(cfg.bin_y)          # ADC (Eq. 7)
+
+    # Eq. 6: rescale by s_x * s_w / G, accumulate in FLOAT32.
+    y = jnp.einsum("tmo,mt,to->mo", y_q, s_x, s_w) / jnp.float32(cfg.gain)
+    return y.reshape(*batch_shape, n_out).astype(cfg.out_dtype)

@@ -1,0 +1,2 @@
+"""repro.launch — mesh, dry-run, drivers.  NOTE: importing dryrun sets
+XLA_FLAGS; import it only in dry-run processes."""

@@ -1,0 +1,23 @@
+"""repro.models — composable model zoo with ABFP-dispatched matmuls."""
+
+from repro.models.layers import (  # noqa: F401
+    Numerics,
+    attention_block,
+    chunked_attention,
+    decode_attention,
+    im2col,
+    layernorm,
+    mlp_block,
+    rmsnorm,
+    rope,
+)
+from repro.models.lm import (  # noqa: F401
+    decode_step,
+    encode,
+    forward,
+    forward_capture,
+    init_decode_state,
+    init_params,
+    param_count,
+)
+from repro.models import frontends, moe, recurrent  # noqa: F401

@@ -1,0 +1,24 @@
+"""Modality frontend STUBS (per assignment: ``input_specs()`` provides
+precomputed frame/patch embeddings; the transformer backbone is the model).
+
+These helpers only generate correctly-shaped stand-ins:
+  * audio (whisper): (B, frames, d_model) frame embeddings — the conv
+    subsampler output the real frontend would produce.
+  * vision (phi-3-vision): (B, seq, d_model) combined patch+token embedding
+    sequence — the CLIP projector output spliced into the text stream.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_stub_features(key, batch: int, frames: int, d_model: int,
+                        dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (batch, frames, d_model)) * 0.02).astype(dtype)
+
+
+def vision_stub_embeddings(key, batch: int, seq: int, d_model: int,
+                           dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (batch, seq, d_model)) * 0.02).astype(dtype)

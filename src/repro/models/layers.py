@@ -1,0 +1,493 @@
+"""Composable model layers.
+
+Every weight-activation matmul is routed through ``Numerics.dense`` so the
+whole zoo runs in FLOAT, ABFP-simulated (QAT forward), or Pallas-kernel mode
+with one switch — ABFP as a first-class framework feature.
+
+Norms, softmax, nonlinearities and the recurrent cell internals run in
+FLOAT32, per the paper (Sec. V: range-sensitive ops stay digital).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abfp import QuantConfig
+from repro.kernels.ops import dense as quant_dense
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Numerics context: quant mode + PRNG threading for AMS noise
+# ---------------------------------------------------------------------------
+
+
+class Numerics:
+    """Per-forward numerics state.
+
+    Each ``dense`` call site gets a deterministic PRNG stream derived from
+    (base key, call counter); the caller folds the layer index into the base
+    key inside scan-over-layers, so streams are unique per (layer, call).
+    """
+
+    def __init__(self, quant: QuantConfig, key: Optional[Array] = None):
+        self.quant = quant
+        self._key = key
+        self._count = 0
+
+    def fold(self, idx) -> "Numerics":
+        key = None if self._key is None else jax.random.fold_in(self._key, idx)
+        return Numerics(self.quant, key)
+
+    def dense(self, x: Array, w: Array) -> Array:
+        key = None
+        if self._key is not None and self.quant.noise_lsb > 0.0 \
+                and self.quant.mode != "float":
+            key = jax.random.fold_in(self._key, self._count)
+        self._count += 1
+        return quant_dense(x, w, self.quant, key)
+
+
+FLOAT_NUMERICS = lambda: Numerics(QuantConfig(mode="float"))  # noqa: E731
+
+
+# ---------------------------------------------------------------------------
+# Norms (digital FLOAT32)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dtype)
+
+
+def layernorm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def norm(x: Array, params: dict, kind: str) -> Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+# ---------------------------------------------------------------------------
+# Positions: RoPE (full / partial "2d") and absolute sinusoidal
+# ---------------------------------------------------------------------------
+
+
+def rope(x: Array, positions: Array, theta: float, fraction: float) -> Array:
+    """x: (B, S, H, D); positions: (B, S).  fraction < 1 rotates only the
+    first fraction*D dims (chatglm's 2d/partial rotary)."""
+    d = x.shape[-1]
+    rot_d = int(d * fraction)
+    rot_d -= rot_d % 2
+    if rot_d == 0:
+        return x
+    x_rot, x_pass = x[..., :rot_d], x[..., rot_d:]
+    half = rot_d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq    # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x_rot[..., :half].astype(jnp.float32), x_rot[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+def sinusoidal_positions(positions: Array, d: int) -> Array:
+    """Sinusoidal PE evaluated at (possibly traced) positions (B, S) -> (B, S, d)."""
+    pos = positions.astype(jnp.float32)[..., None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = pos / jnp.power(10_000.0, dim / d)                 # (B, S, d/2)
+    pe = jnp.zeros(positions.shape + (d,), jnp.float32)
+    pe = pe.at[..., 0::2].set(jnp.sin(ang))
+    pe = pe.at[..., 1::2].set(jnp.cos(ang))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Attention (chunked online-softmax — bounded memory at 32k prefill)
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k: Array, num_heads: int) -> Array:
+    """(B, S, KH, D) -> (B, S, H, D) for GQA/MQA."""
+    kh = k.shape[2]
+    if kh == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // kh, axis=2)
+
+
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: Array | int = 0,
+    chunk: int = 512,
+) -> Array:
+    """Flash-semantics attention in pure JAX: scan over KV chunks with an
+    online softmax, so peak memory is O(B*H*Sq*chunk) instead of O(B*H*Sq*Skv).
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KH, D).  ``window`` > 0 restricts keys to
+    the last ``window`` positions (sliding-window / local attention).
+    ``q_offset``: global position of q[0] (decode / chunked prefill).
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+
+    chunk = min(chunk, skv)
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nchunks = (skv + pad) // chunk
+
+    scale = d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(sq)                       # (Sq,)
+
+    kc = k.reshape(b, nchunks, chunk, h, d).astype(jnp.float32)
+    vc = v.reshape(b, nchunks, chunk, h, d).astype(jnp.float32)
+    kc = jnp.moveaxis(kc, 1, 0)                             # (C, B, c, H, D)
+    vc = jnp.moveaxis(vc, 1, 0)
+
+    neg = jnp.float32(-1e30)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_c, v_c, t = xs
+        kpos = t * chunk + jnp.arange(chunk)                # (c,)
+        s = jnp.einsum("bshd,bchd->bhsc", qf, k_c)          # (B, H, Sq, c)
+        valid = kpos[None, :] < skv
+        if causal:
+            valid = valid & (kpos[None, :] <= q_pos[:, None])
+        if window > 0:
+            valid = valid & (kpos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(valid[None, None], s, neg)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhsc,bchd->bhsd", p, v_c)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), neg, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, jnp.arange(nchunks)))
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]            # (B, H, Sq, D)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)          # (B, Sq, H, D)
+
+
+def train_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 512,
+) -> Array:
+    """Training-path attention: scan over QUERY chunks with a rematerialized
+    body.  Backward recomputes each chunk's (qc, Skv) scores instead of
+    storing all of them — the flash-attention memory profile in pure JAX.
+    (The KV-chunk online-softmax path in ``chunked_attention`` is ideal for
+    inference but its scan carry makes backward storage O(S/c * B*H*S*D).)
+    """
+    b, s, h, d = q.shape
+    skv = k.shape[1]
+    k = _repeat_kv(k, h).astype(jnp.float32)
+    v = _repeat_kv(v, h).astype(jnp.float32)
+    q_chunk = min(q_chunk, s)
+    if s % q_chunk:
+        q_chunk = s
+    nq = s // q_chunk
+    scale = d ** -0.5
+    qc_all = jnp.moveaxis(
+        (q.astype(jnp.float32) * scale).reshape(b, nq, q_chunk, h, d), 1, 0)
+    kpos = jnp.arange(skv)
+
+    def chunk_body(carry, xs):
+        qc, idx = xs                                      # (B, qc, H, D)
+        s_ = jnp.einsum("bqhd,bkhd->bhqk", qc, k)         # (B, H, qc, Skv)
+        qpos = idx * q_chunk + jnp.arange(q_chunk)
+        valid = jnp.ones((q_chunk, skv), bool)
+        if causal:
+            valid = valid & (kpos[None, :] <= qpos[:, None])
+        if window > 0:
+            valid = valid & (kpos[None, :] > qpos[:, None] - window)
+        s_ = jnp.where(valid[None, None], s_, -1e30)
+        p = jax.nn.softmax(s_, axis=-1)
+        out_c = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+        return carry, out_c
+
+    _, outs = jax.lax.scan(jax.checkpoint(chunk_body), None,
+                           (qc_all, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, d)    # (B, S, H, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    *,
+    lengths: Array,
+    window: int = 0,
+) -> Array:
+    """One-token attention against a KV cache.
+
+    q: (B, 1, H, D); caches: (B, S_max, KH, D); ``lengths``: (B,) number of
+    valid cache positions (for a ring-buffer window cache, S_max == window and
+    all filled slots are valid).
+    """
+    b, _, h, d = q.shape
+    s_max = k_cache.shape[1]
+    k = _repeat_kv(k_cache, h).astype(jnp.float32)
+    v = _repeat_kv(v_cache, h).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    s = jnp.einsum("bshd,bchd->bhsc", qf, k)[:, :, 0]       # (B, H, S_max)
+    pos = jnp.arange(s_max)[None, :]
+    valid = pos < lengths[:, None]
+    s = jnp.where(valid[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhc,bchd->bhd", p, v)
+    return out[:, None].transpose(0, 1, 2, 3).reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ABFP-quantized KV cache (beyond-paper: the paper's per-vector adaptive
+# scaling applied to the decode memory bottleneck)
+# ---------------------------------------------------------------------------
+
+
+def _kv_encode(v: Array):
+    """(B, KH, D) -> int8 codes + per-(B, KH) bf16 scale (head_dim = tile)."""
+    vf = v.astype(jnp.float32)
+    s = jnp.max(jnp.abs(vf), axis=-1)                        # (B, KH)
+    s = s.astype(jnp.bfloat16).astype(jnp.float32)
+    s_safe = jnp.where(s == 0.0, 1.0, s)
+    codes = jnp.clip(jnp.round(vf / s_safe[..., None] * 127.0), -127, 127)
+    return codes.astype(jnp.int8), s.astype(jnp.bfloat16)
+
+
+def _kv_decode(codes: Array, scales: Array, dtype) -> Array:
+    """(B, S, KH, D) int8 + (B, S, KH) scales -> dequantized cache."""
+    return (codes.astype(jnp.float32)
+            * (scales.astype(jnp.float32) / 127.0)[..., None]).astype(dtype)
+
+
+def quantized_decode_attention(
+    q: Array,
+    k_codes: Array, k_scale: Array,
+    v_codes: Array, v_scale: Array,
+    *,
+    lengths: Array,
+) -> Array:
+    """Decode attention directly on int8 KV codes (perf iteration 2 of the
+    memory-bound decode cell): the per-position scale factors out of the
+    dot product —
+
+        q . k_t = (q . codes_t) * s_t / 127
+
+    so the cache is read ONCE as int8 (+ tiny scale vectors) instead of
+    int8-read + bf16-write + bf16-read of a dequantized copy.  Same math as
+    dequantize-then-attend up to f32 rounding.
+    """
+    b, _, h, d = q.shape
+    s_max = k_codes.shape[1]
+    kh = k_codes.shape[2]
+    rep = h // kh
+    qf = q.astype(jnp.float32) * (d ** -0.5)                 # (B, 1, H, D)
+    qg = qf.reshape(b, kh, rep, d)                            # group by KV head
+    kc = k_codes.astype(jnp.float32)                          # int8 -> f32 codes
+    # codes layout (B, S, KH, D): contract D per kv head
+    s = jnp.einsum("bgrd,bsgd->bgrs", qg, kc)                 # (B, KH, rep, S)
+    s = s * (k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+             / 127.0)
+    pos = jnp.arange(s_max)[None, None, None, :]
+    s = jnp.where(pos < lengths[:, None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)                            # (B, KH, rep, S)
+    pv = p * (v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+              / 127.0)
+    out = jnp.einsum("bgrs,bsgd->bgrd", pv, v_codes.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections through Numerics)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, mcfg, layer_shape=()) -> dict:
+    d, h, kh = mcfg.d_model, mcfg.num_heads, mcfg.num_kv_heads
+    hd = mcfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = d ** -0.5
+    shape = lambda *s: layer_shape + s  # noqa: E731
+    init = lambda k, *s: (jax.random.normal(k, shape(*s)) * std).astype(mcfg.param_dtype)  # noqa: E731
+    return {
+        "wq": init(k1, d, h * hd),
+        "wk": init(k2, d, kh * hd),
+        "wv": init(k3, d, kh * hd),
+        "wo": init(k4, h * hd, d),
+    }
+
+
+def attention_block(
+    params: dict,
+    x: Array,
+    mcfg,
+    nx: "Numerics",
+    *,
+    positions: Array,
+    causal: bool = True,
+    window: int = 0,
+    kv_cache: Optional[dict] = None,
+    cross_kv: Optional[tuple] = None,
+    train_mode: bool = False,
+):
+    """Self- (or cross-) attention with optional KV cache for decode.
+
+    Returns (output, new_kv_cache).  ``kv_cache``: {"k": (B,S,KH,D),
+    "v": ..., "length": (B,)} — ring buffer when window > 0.
+    ``train_mode`` selects the q-chunked remat attention (backward-memory
+    bounded); inference uses the kv-chunked online-softmax path.
+    """
+    b, s, _ = x.shape
+    h, kh, hd = mcfg.num_heads, mcfg.num_kv_heads, mcfg.resolved_head_dim
+
+    q = nx.dense(x, params["wq"]).reshape(b, s, h, hd)
+    if cross_kv is None:
+        k = nx.dense(x, params["wk"]).reshape(b, s, kh, hd)
+        v = nx.dense(x, params["wv"]).reshape(b, s, kh, hd)
+        if mcfg.pos_type == "rope":
+            q = rope(q, positions, mcfg.rope_theta, mcfg.rope_fraction)
+            k = rope(k, positions, mcfg.rope_theta, mcfg.rope_fraction)
+    else:
+        k, v = cross_kv
+
+    new_cache = None
+    if kv_cache is not None and cross_kv is None:
+        # Decode: append this step's K/V, attend over the filled cache.
+        s_max = kv_cache["k"].shape[1]
+        length = kv_cache["length"]                         # (B,)
+        slot = (length % s_max) if window > 0 else length   # ring for window
+        bidx = jnp.arange(b)
+        quantized = "k_scale" in kv_cache
+        filled = jnp.minimum(length + 1, s_max) if window > 0 else length + 1
+        if quantized:
+            # ABFP-quantized cache (beyond-paper, DESIGN.md): int8 codes +
+            # per-(token, head) max-abs scale over the head_dim vector.
+            # Attention runs directly on the codes (no dequantized copy).
+            kc, ks = _kv_encode(k[:, 0])
+            vc, vs = _kv_encode(v[:, 0])
+            k_cache = kv_cache["k"].at[bidx, slot].set(kc)
+            v_cache = kv_cache["v"].at[bidx, slot].set(vc)
+            k_scale = kv_cache["k_scale"].at[bidx, slot].set(ks)
+            v_scale = kv_cache["v_scale"].at[bidx, slot].set(vs)
+            out = quantized_decode_attention(
+                q, k_cache, k_scale, v_cache, v_scale, lengths=filled)
+            new_cache = {"k": k_cache, "v": v_cache, "length": length + 1,
+                         "k_scale": k_scale, "v_scale": v_scale}
+        else:
+            k_cache = kv_cache["k"].at[bidx, slot].set(
+                k[:, 0].astype(kv_cache["k"].dtype))
+            v_cache = kv_cache["v"].at[bidx, slot].set(
+                v[:, 0].astype(kv_cache["v"].dtype))
+            out = decode_attention(q, k_cache, v_cache, lengths=filled,
+                                   window=window)
+            new_cache = {"k": k_cache, "v": v_cache, "length": length + 1}
+    elif cross_kv is not None:
+        if train_mode:
+            out = train_attention(q, k, v, causal=False,
+                                  q_chunk=mcfg.attn_chunk)
+        elif mcfg.use_flash_attention:
+            from repro.kernels.flash_attention import flash_attention
+            out = flash_attention(q, k, v, causal=False)
+        else:
+            out = chunked_attention(q, k, v, causal=False,
+                                    chunk=mcfg.attn_chunk)
+    elif train_mode:
+        out = train_attention(q, k, v, causal=causal, window=window,
+                              q_chunk=mcfg.attn_chunk)
+    elif mcfg.use_flash_attention:
+        from repro.kernels.flash_attention import flash_attention
+        out = flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        out = chunked_attention(
+            q, k, v, causal=causal, window=window,
+            q_offset=0, chunk=mcfg.attn_chunk)
+
+    out = out.reshape(b, s, h * hd)
+    return nx.dense(out, params["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (swiglu / geglu / gelu)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, mcfg, layer_shape=()) -> dict:
+    d, f = mcfg.d_model, mcfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    shape = lambda *s: layer_shape + s  # noqa: E731
+    p = {
+        "wi": (jax.random.normal(k1, shape(d, f)) * d**-0.5).astype(mcfg.param_dtype),
+        "wo": (jax.random.normal(k2, shape(f, d)) * f**-0.5).astype(mcfg.param_dtype),
+    }
+    if mcfg.mlp_type in ("swiglu", "geglu"):
+        p["wg"] = (jax.random.normal(k3, shape(d, f)) * d**-0.5).astype(mcfg.param_dtype)
+    return p
+
+
+def mlp_block(params: dict, x: Array, mcfg, nx: "Numerics") -> Array:
+    h = nx.dense(x, params["wi"])
+    if mcfg.mlp_type == "swiglu":
+        g = nx.dense(x, params["wg"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    elif mcfg.mlp_type == "geglu":
+        g = nx.dense(x, params["wg"])
+        h = jax.nn.gelu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    return nx.dense(h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# im2col (utility: how the paper maps convs onto tiled matmuls, Sec. V)
+# ---------------------------------------------------------------------------
+
+
+def im2col(x: Array, kh: int, kw: int, stride: int = 1) -> Array:
+    """(B, H, W, C) -> (B, H', W', kh*kw*C) patches so a conv becomes a
+    matmul that ABFP can tile — the paper's treatment of ResNet50 convs."""
+    b, hh, ww, c = x.shape
+    oh = (hh - kh) // stride + 1
+    ow = (ww - kw) // stride + 1
+    idx_h = (jnp.arange(oh) * stride)[:, None] + jnp.arange(kh)[None, :]
+    idx_w = (jnp.arange(ow) * stride)[:, None] + jnp.arange(kw)[None, :]
+    patches = x[:, idx_h[:, None, :, None], idx_w[None, :, None, :], :]
+    return patches.reshape(b, oh, ow, kh * kw * c)

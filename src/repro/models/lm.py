@@ -1,0 +1,539 @@
+"""Model assembly: decoder-only / hybrid / ssm / encoder-decoder LMs.
+
+Layers are grouped by the repeating ``block_pattern`` and scanned with
+stacked weights (`jax.lax.scan` over groups), so HLO size — and 512-device
+SPMD compile time — is independent of depth (61-layer Kimi compiles one
+scanned block).  Remainder layers (pattern not dividing num_layers) are
+applied unrolled.
+
+Forward modes:
+  * ``forward``       — teacher-forced logits for train / prefill.
+  * ``decode_step``   — one token with carried per-layer state (KV cache,
+    ring-buffer window cache, or recurrent state), O(1) per token.
+  * ``forward_capture`` — unrolled paired FLOAT/ABFP pass returning per-layer
+    differential-noise samples for DNF (paper Fig. 3).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.abfp import QuantConfig
+from repro.core.dnf import NoiseHistogram
+from repro.models import moe as moe_lib
+from repro.models import recurrent as rec_lib
+from repro.models.layers import (
+    Numerics,
+    attention_block,
+    init_attention,
+    init_mlp,
+    mlp_block,
+    norm,
+    sinusoidal_positions,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _norm_params(mcfg, shape=()):
+    p = {"scale": jnp.zeros(shape + (mcfg.d_model,), jnp.float32)}
+    if mcfg.norm_type == "layernorm":
+        p["scale"] = jnp.ones(shape + (mcfg.d_model,), jnp.float32)
+        p["bias"] = jnp.zeros(shape + (mcfg.d_model,), jnp.float32)
+    return p
+
+
+def _init_layer(key, mcfg: ModelConfig, kind: str, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": _norm_params(mcfg)}
+    if kind == "attention":
+        p["attn"] = init_attention(ks[0], mcfg)
+        p["norm2"] = _norm_params(mcfg)
+        if mcfg.num_experts:
+            p["moe"] = moe_lib.init_moe(ks[1], mcfg)
+        elif mcfg.d_ff:
+            p["mlp"] = init_mlp(ks[1], mcfg)
+        if cross:
+            p["cross"] = init_attention(ks[2], mcfg)
+            p["norm3"] = _norm_params(mcfg)
+    elif kind == "recurrent":
+        p["rglru"] = rec_lib.init_rglru_block(ks[0], mcfg)
+        p["norm2"] = _norm_params(mcfg)
+        p["mlp"] = init_mlp(ks[1], mcfg)
+    elif kind == "mlstm":
+        p["mlstm"] = rec_lib.init_mlstm_block(ks[0], mcfg)
+    elif kind == "slstm":
+        p["slstm"] = rec_lib.init_slstm_block(ks[0], mcfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _pattern(mcfg: ModelConfig):
+    pattern = mcfg.block_pattern or ("attention",)
+    n_groups = mcfg.num_layers // len(pattern)
+    remainder = mcfg.num_layers % len(pattern)
+    return pattern, n_groups, remainder
+
+
+def init_params(key: Array, mcfg: ModelConfig) -> dict:
+    pattern, n_groups, remainder = _pattern(mcfg)
+    keys = jax.random.split(key, 8)
+
+    params: dict = {
+        "embed": (jax.random.normal(keys[0], (mcfg.vocab_size, mcfg.d_model))
+                  * mcfg.d_model**-0.5).astype(mcfg.param_dtype),
+        "final_norm": _norm_params(mcfg),
+    }
+    cross = mcfg.is_encoder_decoder
+
+    # Stacked pattern groups: one sub-init per pattern position, vmapped over
+    # groups so every leaf gets a leading (n_groups,) axis.
+    group_params = []
+    for j, kind in enumerate(pattern):
+        gkeys = jax.random.split(jax.random.fold_in(keys[1], j), n_groups)
+        group_params.append(
+            jax.vmap(lambda k, kind=kind: _init_layer(k, mcfg, kind, cross))(gkeys))
+    params["groups"] = tuple(group_params)
+
+    extra = []
+    for r in range(remainder):
+        kind = pattern[r]
+        extra.append(_init_layer(jax.random.fold_in(keys[2], r), mcfg, kind, cross))
+    params["extra"] = tuple(extra)
+
+    if not mcfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[3], (mcfg.d_model, mcfg.vocab_size))
+            * mcfg.d_model**-0.5).astype(mcfg.param_dtype)
+
+    if mcfg.is_encoder_decoder:
+        ekeys = jax.random.split(keys[4], mcfg.num_encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(
+                lambda k: _init_layer(k, mcfg, "attention", cross=False))(ekeys),
+            "final_norm": _norm_params(mcfg),
+        }
+    return params
+
+
+def param_count(params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(
+    lp: dict,
+    x: Array,
+    mcfg: ModelConfig,
+    kind: str,
+    nx: Numerics,
+    *,
+    positions: Array,
+    state: Optional[dict] = None,
+    enc_kv: Optional[tuple] = None,
+    mesh=None,
+):
+    """One layer (pre-norm residual).  Returns (x, new_state, aux_loss)."""
+    aux = jnp.float32(0.0)
+    new_state: Any = None
+    if kind == "attention":
+        window = mcfg.window_size if mcfg.attention_type == "hybrid" else 0
+        h = norm(x, lp["norm1"], mcfg.norm_type)
+        attn_out, kv = attention_block(
+            lp["attn"], h, mcfg, nx, positions=positions,
+            window=window, kv_cache=(state or {}).get("kv"),
+            train_mode=mcfg.remat)
+        x = x + attn_out
+        new_state = {"kv": kv} if kv is not None else None
+        if enc_kv is not None:
+            h = norm(x, lp["norm3"], mcfg.norm_type)
+            cross_out, _ = attention_block(
+                lp["cross"], h, mcfg, nx, positions=positions, cross_kv=enc_kv,
+                train_mode=mcfg.remat)
+            x = x + cross_out
+        h = norm(x, lp["norm2"], mcfg.norm_type)
+        if mcfg.num_experts:
+            if mesh is not None:
+                y, aux = moe_lib.moe_block_sharded(lp["moe"], h, mcfg, nx, mesh)
+            else:
+                y, aux = moe_lib.moe_block(lp["moe"], h, mcfg, nx)
+        elif mcfg.d_ff:
+            y = mlp_block(lp["mlp"], h, mcfg, nx)
+        else:
+            y = jnp.zeros_like(x)
+        x = x + y
+    elif kind == "recurrent":
+        h = norm(x, lp["norm1"], mcfg.norm_type)
+        y, st = rec_lib.rglru_block(lp["rglru"], h, mcfg, nx,
+                                    state=(state or {}).get("rec"))
+        x = x + y
+        new_state = {"rec": st}
+        h = norm(x, lp["norm2"], mcfg.norm_type)
+        x = x + mlp_block(lp["mlp"], h, mcfg, nx)
+    elif kind == "mlstm":
+        h = norm(x, lp["norm1"], mcfg.norm_type)
+        y, st = rec_lib.mlstm_block(lp["mlstm"], h, mcfg, nx,
+                                    state=(state or {}).get("rec"))
+        x = x + y
+        new_state = {"rec": st}
+    elif kind == "slstm":
+        h = norm(x, lp["norm1"], mcfg.norm_type)
+        y, st = rec_lib.slstm_block(lp["slstm"], h, mcfg, nx,
+                                    state=(state or {}).get("rec"))
+        x = x + y
+        new_state = {"rec": st}
+    else:
+        raise ValueError(kind)
+    return x, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens_or_embeds, mcfg, positions):
+    if jnp.issubdtype(tokens_or_embeds.dtype, jnp.integer):
+        x = jnp.take(params["embed"], tokens_or_embeds, axis=0)
+    else:
+        x = tokens_or_embeds.astype(mcfg.param_dtype)  # stub frontends
+    x = x.astype(mcfg.activation_dtype)
+    if mcfg.embed_scale:
+        x = x * jnp.asarray(mcfg.d_model**0.5, x.dtype)
+    if mcfg.pos_type == "absolute":
+        x = x + sinusoidal_positions(positions, mcfg.d_model).astype(x.dtype)
+    return x
+
+
+def _lm_head(params, x, mcfg, nx: Numerics):
+    if mcfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]
+    return nx.dense(x, w).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Encoder (enc-dec models)
+# ---------------------------------------------------------------------------
+
+
+def encode(params, features: Array, mcfg, nx: Numerics) -> Array:
+    """Whisper-style encoder over stub frame embeddings (B, S_enc, d)."""
+    b, s, _ = features.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = features.astype(mcfg.activation_dtype)
+    x = x + sinusoidal_positions(positions, mcfg.d_model).astype(x.dtype)
+
+    def body(x, xs):
+        lp, g = xs
+        nxg = nx.fold(1000 + g)
+        h = norm(x, lp["norm1"], mcfg.norm_type)
+        attn_out, _ = attention_block(lp["attn"], h, mcfg, nxg,
+                                      positions=positions, causal=False,
+                                      train_mode=mcfg.remat)
+        x = x + attn_out
+        h = norm(x, lp["norm2"], mcfg.norm_type)
+        x = x + mlp_block(lp["mlp"], h, mcfg, nxg)
+        return x, None
+
+    n_enc = mcfg.num_encoder_layers
+    x, _ = jax.lax.scan(body, x, (params["encoder"]["layers"], jnp.arange(n_enc)))
+    return norm(x, params["encoder"]["final_norm"], mcfg.norm_type)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: dict,
+    tokens: Array,
+    mcfg: ModelConfig,
+    nx: Optional[Numerics] = None,
+    *,
+    encoder_features: Optional[Array] = None,
+    dnf: Optional[NoiseHistogram] = None,
+    dnf_key: Optional[Array] = None,
+    mesh=None,
+    return_hidden: bool = False,
+):
+    """Teacher-forced forward.  ``tokens``: (B, S) int ids or (B, S, d)
+    stub-frontend embeddings.  Returns (logits (B, S, V) f32, aux_loss), or
+    (hidden (B, S, d), aux_loss) with ``return_hidden`` (the chunked-loss
+    path avoids materializing full-vocab logits)."""
+    nx = nx or Numerics(QuantConfig(mode="float"))
+    b, s = tokens.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = _embed(params, tokens, mcfg, positions)
+
+    enc_kv = None
+    if mcfg.is_encoder_decoder:
+        assert encoder_features is not None
+        enc_out = encode(params, encoder_features, mcfg, nx)
+        enc_kv = _cross_kv(params, enc_out, mcfg, nx)   # per-pattern-pos, (NG,...)
+
+    pattern, n_groups, remainder = _pattern(mcfg)
+    glen = len(pattern)
+
+    def body(carry, xs):
+        x, aux = carry
+        gparams, g_enc_kv, g = xs
+        new_aux = aux
+        for j, kind in enumerate(pattern):
+            nxj = nx.fold(g * glen + j)
+            lidx = g * glen + j
+            ek = g_enc_kv[j] if g_enc_kv is not None else None
+            x, _, a = _apply_layer(
+                gparams[j], x, mcfg, kind, nxj,
+                positions=positions, enc_kv=ek, mesh=mesh)
+            new_aux = new_aux + a
+            if dnf is not None:
+                h = dnf.layer(lidx)
+                key_l = jax.random.fold_in(dnf_key, lidx)
+                x = x + h.sample(key_l, x.shape).astype(x.dtype)
+        return (x, new_aux), None
+
+    scan_body = jax.checkpoint(body) if mcfg.remat else body
+    (x, aux), _ = jax.lax.scan(
+        scan_body, (x, jnp.float32(0.0)),
+        (params["groups"], enc_kv, jnp.arange(n_groups)))
+
+    for r in range(remainder):
+        kind = pattern[r]
+        lidx = n_groups * glen + r
+        # Remainder layers only occur for non-enc-dec patterns (no cross-attn).
+        x, _, a = _apply_layer(
+            params["extra"][r], x, mcfg, kind, nx.fold(lidx),
+            positions=positions, enc_kv=None, mesh=mesh)
+        aux = aux + a
+        if dnf is not None:
+            h = dnf.layer(lidx)
+            x = x + h.sample(jax.random.fold_in(dnf_key, lidx), x.shape).astype(x.dtype)
+
+    x = norm(x, params["final_norm"], mcfg.norm_type)
+    if return_hidden:
+        return x, aux
+    logits = _lm_head(params, x, mcfg, nx.fold(999_983))
+    return logits, aux
+
+
+def lm_head_logits(params, hidden: Array, mcfg: ModelConfig,
+                   nx: Optional[Numerics] = None) -> Array:
+    """Project (B, S, d) hidden states to f32 logits (chunked-loss helper)."""
+    nx = nx or Numerics(QuantConfig(mode="float"))
+    return _lm_head(params, hidden, mcfg, nx.fold(999_983))
+
+
+def _cross_kv(params, enc_out, mcfg, nx):
+    """Precompute encoder K/V per decoder layer (whisper cross-attention)."""
+    b, s, _ = enc_out.shape
+    kh, hd = mcfg.num_kv_heads, mcfg.resolved_head_dim
+
+    def per_group(gparams):
+        k = nx.dense(enc_out, gparams["cross"]["wk"]).reshape(b, s, kh, hd)
+        v = nx.dense(enc_out, gparams["cross"]["wv"]).reshape(b, s, kh, hd)
+        return k, v
+
+    # Stacked over groups: vmap over the group axis of the params.  Returns a
+    # list over pattern positions, each (k, v) with leading (n_groups,) axis.
+    return [jax.vmap(per_group, in_axes=0, out_axes=0)(gp)
+            for gp in params["groups"]]
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, carried state)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(mcfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Allocate per-layer decode state, stacked over scan groups."""
+    pattern, n_groups, remainder = _pattern(mcfg)
+    kh, hd = mcfg.num_kv_heads, mcfg.resolved_head_dim
+    dtype = mcfg.activation_dtype
+
+    def one(kind):
+        if kind == "attention":
+            window = mcfg.window_size if mcfg.attention_type == "hybrid" else 0
+            cache_len = window if window > 0 else max_len
+            if mcfg.kv_quant:
+                # ABFP-quantized cache: int8 codes + per-(token, head) scale.
+                return {"kv": {
+                    "k": jnp.zeros((batch, cache_len, kh, hd), jnp.int8),
+                    "v": jnp.zeros((batch, cache_len, kh, hd), jnp.int8),
+                    "k_scale": jnp.zeros((batch, cache_len, kh), jnp.bfloat16),
+                    "v_scale": jnp.zeros((batch, cache_len, kh), jnp.bfloat16),
+                    "length": jnp.zeros((batch,), jnp.int32),
+                }}
+            return {"kv": {
+                "k": jnp.zeros((batch, cache_len, kh, hd), dtype),
+                "v": jnp.zeros((batch, cache_len, kh, hd), dtype),
+                "length": jnp.zeros((batch,), jnp.int32),
+            }}
+        if kind == "recurrent":
+            r = mcfg.lru_width or mcfg.d_model
+            return {"rec": {
+                "conv": jnp.zeros((batch, mcfg.conv_width - 1, r), dtype),
+                "h": jnp.zeros((batch, r), jnp.float32),
+            }}
+        if kind == "mlstm":
+            inner = 2 * mcfg.d_model
+            nh = mcfg.num_heads
+            dh = inner // nh
+            return {"rec": {
+                "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+                "n": jnp.zeros((batch, nh, dh), jnp.float32),
+                "m": jnp.zeros((batch, nh), jnp.float32),
+            }}
+        if kind == "slstm":
+            nh = mcfg.num_heads
+            dh = mcfg.d_model // nh
+            z = jnp.zeros((batch, nh, dh), jnp.float32)
+            return {"rec": {"h": z, "c": z, "n": z,
+                            "m": jnp.full((batch, nh, dh), -1e30, jnp.float32)}}
+        raise ValueError(kind)
+
+    def stack(tree, n):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)
+
+    state = {
+        "groups": tuple(stack(one(kind), n_groups) for kind in pattern),
+        "extra": tuple(one(pattern[r]) for r in range(remainder)),
+        "position": jnp.zeros((batch,), jnp.int32),
+    }
+    return state
+
+
+def decode_step(
+    params: dict,
+    state: dict,
+    token: Array,
+    mcfg: ModelConfig,
+    nx: Optional[Numerics] = None,
+    *,
+    enc_kv=None,
+):
+    """One decode step.  token: (B,) int32 (or (B, d) embeds).
+    Returns (logits (B, V) f32, new_state)."""
+    nx = nx or Numerics(QuantConfig(mode="float"))
+    b = token.shape[0]
+    positions = state["position"][:, None]                   # (B, 1)
+    tok = token[:, None] if token.ndim == 1 else token[:, None, :]
+    x = _embed(params, tok, mcfg, positions)
+
+    pattern, n_groups, remainder = _pattern(mcfg)
+    glen = len(pattern)
+
+    def body(x, xs):
+        gparams, gstate, g_enc_kv, g = xs
+        new_states = []
+        for j, kind in enumerate(pattern):
+            nxj = nx.fold(g * glen + j)
+            ek = g_enc_kv[j] if g_enc_kv is not None else None
+            x, st, _ = _apply_layer(
+                gparams[j], x, mcfg, kind, nxj,
+                positions=positions, state=gstate[j], enc_kv=ek)
+            new_states.append(st)
+        return x, tuple(new_states)
+
+    x, new_group_states = jax.lax.scan(
+        body, x,
+        (params["groups"], state["groups"], enc_kv, jnp.arange(n_groups)))
+
+    new_extra = []
+    for r in range(remainder):
+        kind = pattern[r]
+        x, st, _ = _apply_layer(
+            params["extra"][r], x, mcfg, kind, nx.fold(n_groups * glen + r),
+            positions=positions, state=state["extra"][r], enc_kv=None)
+        new_extra.append(st)
+
+    x = norm(x, params["final_norm"], mcfg.norm_type)
+    logits = _lm_head(params, x, mcfg, nx.fold(999_983))[:, 0]
+    new_state = {
+        "groups": new_group_states,
+        "extra": tuple(new_extra),
+        "position": state["position"] + 1,
+    }
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# DNF paired capture (unrolled; smoke/finetune scale)
+# ---------------------------------------------------------------------------
+
+
+def forward_capture(
+    params: dict,
+    tokens: Array,
+    mcfg: ModelConfig,
+    nx_float: Numerics,
+    nx_abfp_factory,
+    *,
+    encoder_features=None,
+):
+    """Paper Fig. 3: run each layer in FLOAT on the FLOAT stream, also run the
+    ABFP version of the layer on the SAME input, and collect dy = ABFP - FLOAT
+    per layer.  Unrolled (python loop) — used once, on one batch.
+
+    ``nx_abfp_factory()`` must return a fresh ABFP Numerics per layer call.
+    Returns (logits, [dy_1, ..., dy_L]) with dy in f32.
+    """
+    b, s = tokens.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = _embed(params, tokens, mcfg, positions)
+
+    enc_kv = None
+    if mcfg.is_encoder_decoder:
+        enc_out = encode(params, encoder_features, mcfg, nx_float)
+        enc_kv = _cross_kv(params, enc_out, mcfg, nx_float)
+
+    pattern, n_groups, remainder = _pattern(mcfg)
+    glen = len(pattern)
+    deltas = []
+
+    def layer_at(j, g):
+        return jax.tree.map(lambda p: p[g], params["groups"][j])
+
+    for g in range(n_groups):
+        for j, kind in enumerate(pattern):
+            lidx = g * glen + j
+            lp = layer_at(j, g)
+            ek = enc_kv[j] if enc_kv is not None else None
+            ekg = jax.tree.map(lambda a: a[g], ek) if ek is not None else None
+            x_f, _, _ = _apply_layer(lp, x, mcfg, kind, nx_float.fold(lidx),
+                                     positions=positions, enc_kv=ekg)
+            x_q, _, _ = _apply_layer(lp, x, mcfg, kind,
+                                     nx_abfp_factory().fold(lidx),
+                                     positions=positions, enc_kv=ekg)
+            deltas.append((x_q.astype(jnp.float32) - x_f.astype(jnp.float32)))
+            x = x_f                                           # FLOAT stream
+    for r in range(remainder):
+        kind = pattern[r]
+        lidx = n_groups * glen + r
+        lp = params["extra"][r]
+        x_f, _, _ = _apply_layer(lp, x, mcfg, kind, nx_float.fold(lidx),
+                                 positions=positions, enc_kv=None)
+        x_q, _, _ = _apply_layer(lp, x, mcfg, kind, nx_abfp_factory().fold(lidx),
+                                 positions=positions, enc_kv=None)
+        deltas.append((x_q.astype(jnp.float32) - x_f.astype(jnp.float32)))
+        x = x_f
+
+    x = norm(x, params["final_norm"], mcfg.norm_type)
+    logits = _lm_head(params, x, mcfg, nx_float.fold(999_983))
+    return logits, deltas

@@ -1,0 +1,204 @@
+"""Mixture-of-Experts FFN.
+
+Three execution paths share one routing front-end (softmax -> top-k ->
+renormalized gates + switch-style load-balancing aux loss):
+
+  * ``_ragged_moe``   — single-shard sort + ``jax.lax.ragged_dot``: tokens are
+    replicated k times, sorted by expert, run through grouped matmuls, and
+    scatter-added back.  No (T, E, C) one-hot dispatch tensor is ever built —
+    the classic GShard dispatch einsum is infeasible at 384 experts.
+  * ``moe_block_sharded`` — expert parallelism via ``shard_map``: experts are
+    sharded over the 'model' mesh axis; every shard routes all of its local
+    tokens, keeps the (token, expert) pairs that map to its local experts
+    (fixed capacity with dropping, GShard-style), computes them with
+    ragged_dot, and a single psum over 'model' combines the partial outputs —
+    the same collective cost as a tensor-parallel FFN all-reduce, with no
+    all-to-all required because activations are already replicated over
+    'model'.
+  * ``_loop_moe``     — ABFP/QAT path: a static loop over experts so every
+    expert matmul goes through the quantized ``Numerics.dense`` (ragged_dot
+    cannot carry per-tile ABFP semantics).  Used for quantization-aware work
+    at smoke scale; guarded against huge expert counts.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Numerics
+
+Array = jax.Array
+
+
+def init_moe(key, mcfg, layer_shape=()) -> dict:
+    e, d, f = mcfg.num_experts, mcfg.d_model, mcfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    shape = lambda *s: layer_shape + s  # noqa: E731
+    return {
+        "router": (jax.random.normal(k1, shape(d, e)) * d**-0.5).astype(jnp.float32),
+        "wi": (jax.random.normal(k2, shape(e, d, f)) * d**-0.5).astype(mcfg.param_dtype),
+        "wg": (jax.random.normal(k3, shape(e, d, f)) * d**-0.5).astype(mcfg.param_dtype),
+        "wo": (jax.random.normal(k4, shape(e, f, d)) * f**-0.5).astype(mcfg.param_dtype),
+    }
+
+
+def _route(xf: Array, router_w: Array, mcfg):
+    """Returns (gates (T,k), expert_ids (T,k), aux_loss scalar)."""
+    logits = jnp.matmul(xf.astype(jnp.float32), router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
+    gates, eids = jax.lax.top_k(probs, mcfg.experts_per_token)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    # Switch-transformer load-balance loss: E * sum_e f_e * p_e.
+    e = mcfg.num_experts
+    density = jnp.zeros((e,), jnp.float32).at[eids.reshape(-1)].add(1.0)
+    density = density / jnp.maximum(density.sum(), 1.0)
+    p_mean = probs.mean(axis=0)
+    aux = e * jnp.sum(density * p_mean)
+    return gates, eids, aux
+
+
+def _expert_ffn_ragged(xs, wi, wg, wo, group_sizes, mcfg):
+    """Grouped SwiGLU FFN over expert-sorted rows."""
+    f32 = jnp.float32
+    hi = jax.lax.ragged_dot(xs, wi.astype(xs.dtype), group_sizes,
+                            preferred_element_type=f32)
+    hg = jax.lax.ragged_dot(xs, wg.astype(xs.dtype), group_sizes,
+                            preferred_element_type=f32)
+    if mcfg.mlp_type == "geglu":
+        h = jax.nn.gelu(hg) * hi
+    else:
+        h = jax.nn.silu(hg) * hi
+    out = jax.lax.ragged_dot(h.astype(xs.dtype), wo.astype(xs.dtype),
+                             group_sizes, preferred_element_type=f32)
+    return out
+
+
+def _ragged_moe(xf, params, gates, eids, mcfg):
+    t, d = xf.shape
+    k = mcfg.experts_per_token
+    e = mcfg.num_experts
+    flat_e = eids.reshape(-1)                                 # (T*k,)
+    order = jnp.argsort(flat_e)                               # stable
+    token_idx = order // k
+    xs = jnp.take(xf, token_idx, axis=0)                      # (T*k, d)
+    group_sizes = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+    out = _expert_ffn_ragged(xs, params["wi"], params["wg"], params["wo"],
+                             group_sizes, mcfg)
+    w = jnp.take(gates.reshape(-1), order)                    # (T*k,)
+    y = jnp.zeros((t, d), jnp.float32).at[token_idx].add(out * w[:, None])
+    return y.astype(xf.dtype)
+
+
+def _loop_moe(xf, params, gates, eids, mcfg, nx: Numerics):
+    """ABFP path: every expert matmul through the quantized dense.  Computes
+    all tokens through each expert and masks — O(E/k) overcompute, acceptable
+    at QAT/smoke scale, exact ABFP semantics per expert tile."""
+    if mcfg.num_experts > 64:
+        raise ValueError(
+            "ABFP-mode MoE uses the per-expert loop; >64 experts is "
+            "intentionally unsupported (see module docstring)")
+    t, d = xf.shape
+    y = jnp.zeros((t, d), jnp.float32)
+    for ex in range(mcfg.num_experts):
+        sel = (eids == ex).astype(jnp.float32)                # (T, k)
+        gate_e = jnp.sum(gates * sel, axis=-1)                # (T,)
+        hi = nx.dense(xf, params["wi"][ex])
+        hg = nx.dense(xf, params["wg"][ex])
+        act = jax.nn.gelu if mcfg.mlp_type == "geglu" else jax.nn.silu
+        h = (act(hg.astype(jnp.float32)) * hi.astype(jnp.float32)).astype(xf.dtype)
+        out = nx.dense(h, params["wo"][ex]).astype(jnp.float32)
+        y = y + out * gate_e[:, None]
+    return y.astype(xf.dtype)
+
+
+def moe_block(params: dict, x: Array, mcfg, nx: Numerics):
+    """Single-shard MoE.  x: (B, S, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    gates, eids, aux = _route(xf, params["router"], mcfg)
+    if nx.quant.mode == "float":
+        y = _ragged_moe(xf, params, gates, eids, mcfg)
+    else:
+        y = _loop_moe(xf, params, gates, eids, mcfg, nx)
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel path (shard_map over the 'model' axis)
+# ---------------------------------------------------------------------------
+
+
+def moe_block_sharded(params: dict, x: Array, mcfg, nx: Numerics, mesh,
+                      *, batch_axes=("pod", "data"), expert_axis="model"):
+    """Expert-parallel MoE: experts sharded over ``expert_axis``.
+
+    Activations enter sharded over ``batch_axes`` (replicated over the expert
+    axis), so no all-to-all is needed: each shard computes its local experts
+    for its local tokens at fixed capacity and one psum combines.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    batch_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    n_shards = mesh.shape[expert_axis]
+    e_local = mcfg.num_experts // n_shards
+    assert e_local * n_shards == mcfg.num_experts
+
+    b, s, d = x.shape
+    batch_spec = P(batch_axes, None, None)
+
+    def local_fn(xl, router_w, wi, wg, wo):
+        # xl: (B_loc, S, d) — replicated over expert_axis.
+        bl = xl.shape[0]
+        xf = xl.reshape(bl * s, d)
+        t = xf.shape[0]
+        k = mcfg.experts_per_token
+        gates, eids, aux = _route(xf, router_w, mcfg)
+
+        shard = jax.lax.axis_index(expert_axis)
+        lo = shard * e_local
+        local_id = eids - lo                                  # (T, k)
+        mine = (local_id >= 0) & (local_id < e_local)
+
+        flat_local = jnp.where(mine, local_id, e_local).reshape(-1)
+        flat_gates = jnp.where(mine, gates, 0.0).reshape(-1)
+        order = jnp.argsort(flat_local)                       # mine first
+        capacity = int(
+            (t * k / n_shards) * mcfg.capacity_factor) + 1
+        capacity = min(capacity, t * k)
+        rows = order[:capacity]
+        token_idx = rows // k
+        xs = jnp.take(xf, token_idx, axis=0)                  # (C, d)
+        sorted_ids = flat_local[rows]
+        counts = jnp.bincount(sorted_ids, length=e_local + 1).astype(jnp.int32)
+        # Overflow/not-mine rows fold into the last real group with zero gate.
+        group_sizes = counts[:e_local].at[e_local - 1].add(counts[e_local])
+        w_rows = jnp.where(sorted_ids < e_local, flat_gates[rows], 0.0)
+
+        out = _expert_ffn_ragged(xs, wi, wg, wo, group_sizes, mcfg)
+        y = jnp.zeros((t, d), jnp.float32).at[token_idx].add(
+            out * w_rows[:, None])
+        y = jax.lax.psum(y, expert_axis)
+        # aux is identical across expert shards (same local tokens) but
+        # differs across data shards: mean over everything so the returned
+        # scalar equals the global-batch load-balance loss.
+        aux = jax.lax.pmean(aux, (expert_axis,) + tuple(batch_axes))
+        return y.reshape(bl, s, d).astype(xl.dtype), aux
+
+    y, aux = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(
+            batch_spec,
+            P(),                                   # router replicated
+            P(expert_axis, None, None),
+            P(expert_axis, None, None),
+            P(expert_axis, None, None),
+        ),
+        out_specs=(batch_spec, P()),
+        check_rep=False,
+    )(x, params["router"], params["wi"], params["wg"], params["wo"])
+    return y, aux

@@ -1,0 +1,2 @@
+"""repro.serving — continuous-batching engine (ABFP or float numerics)."""
+from repro.serving.engine import Request, ServingEngine  # noqa: F401

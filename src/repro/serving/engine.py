@@ -1,0 +1,134 @@
+"""Batched serving engine: continuous batching at token granularity.
+
+Every tick advances ALL live slots by one token.  A slot still consuming its
+prompt feeds the next prompt token (chunkless "prefill-in-decode"); a slot
+past its prompt feeds its last sampled token and records the new one.  Slots
+join/leave without recompilation — occupancy is data, not shape — and a
+joining request resets its slot's state slice (position, KV validity via
+length, recurrent states).
+
+Numerics are pluggable: ``QuantConfig(mode="abfp_ref")`` serves the model
+exactly as the AMS device would compute it (the paper's deployment target),
+``mode="float"`` is the FLOAT32 reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.abfp import QuantConfig
+from repro.models import decode_step, init_decode_state
+from repro.models.layers import Numerics
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    generated: List[int] = dataclasses.field(default_factory=list)
+    prompt_pos: int = 0
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, params, mcfg: ModelConfig, *, capacity: int = 8,
+                 max_len: int = 512,
+                 quant: QuantConfig = QuantConfig(mode="float"),
+                 seed: int = 0):
+        self.params = params
+        self.mcfg = mcfg
+        self.capacity = capacity
+        self.max_len = max_len
+        self.quant = quant
+        self.key = jax.random.PRNGKey(seed)
+        self.state = init_decode_state(mcfg, capacity, max_len)
+        self.slots: List[Optional[Request]] = [None] * capacity
+        self._next_input = np.zeros((capacity,), np.int32)
+        self.ticks = 0
+
+        def _step(params, state, token, key):
+            nx = Numerics(quant, key)
+            return decode_step(params, state, token, mcfg, nx)
+
+        self._jit_step = jax.jit(_step, donate_argnums=(1,))
+
+    # -- slot state reset -----------------------------------------------------
+    def _reset_slot(self, i: int):
+        def reset(path, leaf):
+            names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path]
+            b_axis = 1 if "groups" in names else 0
+            if leaf.ndim <= b_axis:
+                return leaf
+            idx = (slice(None),) * b_axis + (i,)
+            fill = -1e30 if names[-1] == "m" and leaf.ndim - b_axis == 3 else 0
+            return leaf.at[idx].set(fill)
+
+        self.state = jax.tree_util.tree_map_with_path(reset, self.state)
+
+    # -- admission ------------------------------------------------------------
+    def try_admit(self, req: Request) -> bool:
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                self._reset_slot(i)
+                self.slots[i] = req
+                self._next_input[i] = req.prompt[0]
+                req.prompt_pos = 1
+                return True
+        return False
+
+    # -- one engine tick --------------------------------------------------------
+    def step(self):
+        if not any(s is not None for s in self.slots):
+            return
+        token = jnp.asarray(self._next_input)
+        self.key, sub = jax.random.split(self.key)
+        logits, self.state = self._jit_step(self.params, self.state, token, sub)
+        logits = np.asarray(logits, np.float32)
+        self.ticks += 1
+
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if req.prompt_pos < len(req.prompt):
+                # still prefilling: feed the next prompt token, ignore logits
+                self._next_input[i] = req.prompt[req.prompt_pos]
+                req.prompt_pos += 1
+                continue
+            if req.temperature > 0:
+                z = logits[i] / req.temperature
+                z -= z.max()
+                p = np.exp(z)
+                p /= p.sum()
+                nxt = int(np.random.default_rng(req.uid * 7919 + len(req.generated))
+                          .choice(len(p), p=p))
+            else:
+                nxt = int(np.argmax(logits[i]))
+            req.generated.append(nxt)
+            self._next_input[i] = nxt
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                self.slots[i] = None            # free for the next request
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve a workload to completion (FCFS admission)."""
+        pending = list(requests)
+        inflight: List[Request] = []
+        finished: List[Request] = []
+        while pending or inflight:
+            while pending and self.try_admit(pending[0]):
+                inflight.append(pending.pop(0))
+            self.step()
+            for r in list(inflight):
+                if r.done:
+                    inflight.remove(r)
+                    finished.append(r)
+        return finished

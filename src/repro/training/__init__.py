@@ -1,0 +1,3 @@
+"""repro.training — train/serve step factories, QAT/DNF recipes."""
+from repro.training.train_lib import (  # noqa: F401
+    TrainConfig, TrainState, cross_entropy, make_serve_steps, make_train_step)

@@ -1,0 +1,264 @@
+"""Unit tests for the ABFP core numerics (Eqs. 1-8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import abfp
+from repro.core.abfp import QuantConfig
+from repro.kernels.ref import abfp_matmul_ref
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1 — quantizer
+# ---------------------------------------------------------------------------
+
+
+def test_quantizer_lattice_and_clamp():
+    delta = abfp.quant_delta(8)  # 1/127
+    v = jnp.array([0.0, delta, 2.5 * delta, -3.4 * delta, 5.0, -5.0])
+    q = abfp.quantize(v, delta, 1.0)
+    # On-lattice values unchanged; off-lattice rounded; out-of-range clamped.
+    np.testing.assert_allclose(q[0], 0.0)
+    np.testing.assert_allclose(q[1], delta, rtol=1e-6)
+    np.testing.assert_allclose(q[3], -3.0 * delta, rtol=1e-6)
+    np.testing.assert_allclose(q[4], 1.0)
+    np.testing.assert_allclose(q[5], -1.0)
+    # round-half-even: 2.5 -> 2, 3.5 -> 4
+    np.testing.assert_allclose(q[2], 2.0 * delta, rtol=1e-6)
+    q35 = abfp.quantize(jnp.array(3.5 * delta), delta, 1.0)
+    np.testing.assert_allclose(q35, 4.0 * delta, rtol=1e-6)
+
+
+def test_quantizer_idempotent():
+    delta = abfp.quant_delta(6)
+    v = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    q1 = abfp.quantize(v, delta, 1.0)
+    q2 = abfp.quantize(q1, delta, 1.0)
+    np.testing.assert_allclose(q1, q2, atol=0)
+
+
+def test_quant_delta_values():
+    assert abfp.quant_delta(8) == pytest.approx(1 / 127)
+    assert abfp.quant_delta(6) == pytest.approx(1 / 31)
+
+
+# ---------------------------------------------------------------------------
+# Tile scales
+# ---------------------------------------------------------------------------
+
+
+def test_tile_scales_max_abs_and_zero_tile():
+    v = jnp.array([[1.0, -3.0, 0.5, 2.0], [0.0, 0.0, 0.0, 0.0]])
+    s = abfp.tile_scales(v)
+    np.testing.assert_allclose(s, [3.0, 0.0])
+    np.testing.assert_allclose(abfp.safe_scale(s), [3.0, 1.0])
+
+
+def test_weight_tiles_shapes_and_padding():
+    cfg = QuantConfig(tile_width=8)
+    w = jax.random.normal(jax.random.PRNGKey(1), (20, 16))
+    w_q, s_w = abfp.quantize_weight_tiles(w, cfg)
+    assert w_q.shape == (3, 8, 16)  # ceil(20/8)=3 tiles
+    assert s_w.shape == (3, 16)
+    # Integer codes in [-L, L], L = 2^(b-1)-1 = 127.
+    assert bool(jnp.all(jnp.abs(w_q) <= 127))
+    np.testing.assert_allclose(np.asarray(w_q), np.asarray(jnp.round(w_q)))
+    # The value lattice w_q * delta_w * s_w approximates w.
+    recon = (w_q * abfp.quant_delta(8)).reshape(24, 16)[:20] * 1.0
+    # per-tile scale broadcast
+    s_full = jnp.repeat(s_w, 8, axis=0)[:20]
+    np.testing.assert_allclose(
+        np.asarray(recon * s_full), np.asarray(w), atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# ABFP matmul: scan path vs independent einsum oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [8, 32, 128])
+@pytest.mark.parametrize("gain", [1.0, 8.0])
+@pytest.mark.parametrize("noise", [0.0, 0.5])
+def test_scan_matches_oracle(n, gain, noise):
+    # f32 output: the two paths differ only in f32 accumulation order, so a
+    # tight tolerance holds (bf16 output would round that tiny difference
+    # across an ULP boundary).
+    cfg = QuantConfig(tile_width=n, gain=gain, noise_lsb=noise,
+                      out_dtype=jnp.float32)
+    key = jax.random.PRNGKey(42)
+    kx, kw, kn = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (6, 200)).astype(jnp.bfloat16)
+    w = (jax.random.laplace(kw, (200, 48)) * 0.1).astype(jnp.bfloat16)
+    y_scan = abfp.abfp_matmul(x, w, cfg, kn)
+    y_ref = abfp_matmul_ref(x, w, cfg, kn)
+    np.testing.assert_allclose(
+        np.asarray(y_scan), np.asarray(y_ref), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_abfp_close_to_float_at_high_bits():
+    """With many bits, no noise, gain 1, ABFP ~= exact matmul."""
+    # f32 scales: with bf16 scale storage (the paper's default) the error
+    # floor is the bf16 rounding of the per-tile max (~0.4%), which dominates
+    # at high bitwidths.
+    cfg = QuantConfig(tile_width=32, bits_w=16, bits_x=16, bits_y=24, gain=1.0,
+                      noise_lsb=0.0, out_dtype=jnp.float32,
+                      scale_dtype=jnp.float32)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 128), dtype=jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 32), dtype=jnp.float32)
+    y = abfp.abfp_matmul(x, w, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-3, atol=1e-3)
+
+
+def test_gain_saturation_tradeoff():
+    """Paper Sec. III-B: at large tiles moderate gain reduces error, huge gain
+    saturates.  Check error(G=8) < error(G=1) and error(G=256) > error(G=8)
+    for tile 128 at 8/8/8."""
+    key = jax.random.PRNGKey(7)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (16, 768), dtype=jnp.float32)
+    w = jax.random.laplace(kw, (768, 256)) * (1 / np.sqrt(768))
+    y_exact = x @ w
+
+    def err(gain):
+        cfg = QuantConfig(tile_width=128, gain=gain, noise_lsb=0.0,
+                          out_dtype=jnp.float32)
+        y = abfp.abfp_matmul(x, w, cfg)
+        return float(jnp.sqrt(jnp.mean((y - y_exact) ** 2)))
+
+    e1, e8, e256 = err(1.0), err(8.0), err(256.0)
+    assert e8 < e1, (e1, e8)
+    assert e256 > e8, (e8, e256)
+
+
+def test_small_tile_prefers_low_gain():
+    """At tile 8 the output range is small; gain mostly saturates (Table II row 1)."""
+    key = jax.random.PRNGKey(3)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (16, 768), dtype=jnp.float32)
+    w = jax.random.laplace(kw, (768, 256)) * (1 / np.sqrt(768))
+    y_exact = x @ w
+
+    def err(gain):
+        cfg = QuantConfig(tile_width=8, gain=gain, noise_lsb=0.0,
+                          out_dtype=jnp.float32)
+        y = abfp.abfp_matmul(x, w, cfg)
+        return float(jnp.sqrt(jnp.mean((y - y_exact) ** 2)))
+
+    assert err(1.0) < err(16.0)
+
+
+def test_noise_statistics():
+    """E ~ U(-n*dY/2, +n*dY/2): mean ~ 0, var ~ (n*dY)^2/12."""
+    cfg = QuantConfig(tile_width=128, bits_y=8, noise_lsb=0.5)
+    e = abfp.ams_noise(jax.random.PRNGKey(0), (200_000,), cfg)
+    lsb = 128 * abfp.quant_delta(8)
+    assert abs(float(e.mean())) < lsb * 0.01
+    np.testing.assert_allclose(float(e.var()), lsb**2 / 12, rtol=0.05)
+    assert float(jnp.abs(e).max()) <= lsb / 2
+
+
+def test_digital_vs_ams_quantization_order():
+    """Paper's aside under Eq. 4: digital (accumulate-then-quantize) has lower
+    error than AMS (quantize-then-accumulate) at the same bitwidths."""
+    key = jax.random.PRNGKey(11)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (8, 512), dtype=jnp.float32)
+    w = jax.random.laplace(kw, (512, 64)) * (1 / np.sqrt(512))
+    y_exact = x @ w
+    cfg = QuantConfig(tile_width=128, gain=1.0, noise_lsb=0.0, out_dtype=jnp.float32)
+    y_ams = abfp.abfp_matmul(x, w, cfg)
+    y_dig = abfp.digital_bfp_matmul(x, w, cfg)
+    err_ams = float(jnp.mean((y_ams - y_exact) ** 2))
+    err_dig = float(jnp.mean((y_dig - y_exact) ** 2))
+    assert err_dig < err_ams, (err_dig, err_ams)
+
+
+# ---------------------------------------------------------------------------
+# STE (QAT backward, Eq. 8)
+# ---------------------------------------------------------------------------
+
+
+def test_ste_grads_match_plain_matmul():
+    cfg = QuantConfig(tile_width=32, noise_lsb=0.0)
+    key = jax.random.PRNGKey(5)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (4, 64), dtype=jnp.float32)
+    w = jax.random.normal(kw, (64, 16), dtype=jnp.float32)
+
+    def loss_abfp(x, w):
+        return jnp.sum(abfp.abfp_matmul_ste(x, w, cfg, None).astype(jnp.float32) ** 0 *
+                       abfp.abfp_matmul_ste(x, w, cfg, None).astype(jnp.float32))
+
+    def loss_plain(x, w):
+        return jnp.sum(x @ w)
+
+    gx_a, gw_a = jax.grad(lambda x, w: jnp.sum(
+        abfp.abfp_matmul_ste(x, w, cfg, None).astype(jnp.float32)), argnums=(0, 1))(x, w)
+    gx_p, gw_p = jax.grad(loss_plain, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx_a), np.asarray(gx_p), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw_a), np.asarray(gw_p), rtol=1e-5)
+
+
+def test_quantize_ste_identity_gradient():
+    delta = abfp.quant_delta(8)
+    g = jax.grad(lambda v: jnp.sum(abfp.quantize_ste(v, delta, 1.0)))(
+        jnp.linspace(-0.9, 0.9, 32))
+    np.testing.assert_allclose(np.asarray(g), np.ones(32))
+
+
+def test_batched_leading_dims():
+    cfg = QuantConfig(tile_width=8, noise_lsb=0.0)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 40))
+    w = jax.random.normal(jax.random.PRNGKey(1), (40, 24))
+    y = abfp.abfp_matmul(x, w, cfg)
+    assert y.shape == (2, 3, 24)
+    assert y.dtype == jnp.bfloat16
+    assert not bool(jnp.any(jnp.isnan(y.astype(jnp.float32))))
+
+
+def test_per_tile_scaling_outlier_robustness():
+    """Paper Sec. III-A: per-vector adaptive scales give 'reduced sensitivity
+    to outliers' vs coarser scale granularity.  With rare 50x outliers, small
+    tiles confine the resolution loss to the outlier's own tile, while a
+    whole-row scale (tile = K, the per-tensor limit) destroys resolution for
+    everything.
+
+    Also documents a measured NEGATIVE result for the Sec. VI future-work
+    percentile knob: under per-TILE scaling, percentile clipping makes errors
+    WORSE (the clipped outlier corrupts whole dot products), because ABFP
+    already localizes outliers — exactly the paper's argument for adaptive
+    per-vector scales.  (`scale_percentile` remains available for per-tensor
+    style deployments.)"""
+    key = jax.random.PRNGKey(21)
+    kx, kw, ko = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (16, 512), dtype=jnp.float32)
+    mask = jax.random.bernoulli(ko, 0.01, x.shape)
+    x = jnp.where(mask, x * 50.0, x)
+    w = jax.random.laplace(kw, (512, 64)) * (1 / np.sqrt(512))
+    y_exact = x @ w
+
+    def err(cfg):
+        y = abfp.abfp_matmul(x, w, cfg)
+        return float(jnp.median(jnp.abs(y - y_exact)))
+
+    small = QuantConfig(tile_width=32, bits_x=6, bits_w=6, noise_lsb=0.0,
+                        out_dtype=jnp.float32)
+    row = small.replace(tile_width=512)        # per-tensor-like granularity
+    assert err(small) < err(row), (err(small), err(row))
+    # Negative result: percentile clipping on top of per-tile scales hurts.
+    pct = small.replace(scale_percentile=97.0)
+    assert err(pct) > err(small), (err(pct), err(small))
+
+
+def test_percentile_100_equals_max():
+    cfg_max = QuantConfig(tile_width=32, noise_lsb=0.0, out_dtype=jnp.float32)
+    cfg_100 = cfg_max.replace(scale_percentile=100.0)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 16)) * 0.1
+    np.testing.assert_array_equal(
+        np.asarray(abfp.abfp_matmul(x, w, cfg_max)),
+        np.asarray(abfp.abfp_matmul(x, w, cfg_100)))

@@ -1,0 +1,65 @@
+"""Mini dry-run integration test: the real dryrun.py entry point on a small
+placeholder mesh (subprocess so XLA device count doesn't leak into other
+tests)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+       "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+
+
+def _run(args, timeout=560):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=timeout, env=ENV,
+        cwd="/root/repo")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("whisper-base", "prefill_32k"),         # enc-dec
+    ("whisper-base", "train_4k"),            # enc-dec train
+    ("xlstm-350m", "long_500k"),             # ssm long-context decode
+])
+def test_dryrun_cell_mini_mesh(arch, shape):
+    r = _run(["--arch", arch, "--shape", shape, "--mesh-shape", "4,2"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "compiled OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_mini():
+    """3-axis (pod, data, model) mesh lowers and compiles."""
+    r = _run(["--arch", "smollm-360m", "--shape", "decode_32k",
+              "--mesh-shape", "2,2,2"])
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_dryrun_abfp_mode_mini():
+    r = _run(["--arch", "smollm-360m", "--shape", "prefill_32k",
+              "--mesh-shape", "4,2", "--quant", "abfp"])
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_dryrun_artifacts_exist_and_parse():
+    """The full-mesh grid artifacts (written by the deliverable-e run) are
+    valid JSON with the fields the roofline analysis needs."""
+    art = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+    files = [f for f in os.listdir(art) if f.endswith(".json")]
+    assert len(files) >= 64, f"expected 32 cells x 2 meshes, got {len(files)}"
+    meshes = set()
+    for f in files:
+        with open(os.path.join(art, f)) as fh:
+            d = json.load(fh)
+        for k in ("arch", "shape", "mesh", "flops_per_device",
+                  "collectives", "live_bytes_per_device"):
+            assert k in d, (f, k)
+        meshes.add(d["mesh"])
+    assert {"16x16", "2x16x16"} <= meshes

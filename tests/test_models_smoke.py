@@ -1,0 +1,196 @@
+"""Per-architecture smoke tests: reduced config, one forward + train-grad +
+decode step on CPU; asserts shapes and no NaNs.  (Deliverable f.)"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config, smoke_config
+from repro.core.abfp import QuantConfig
+from repro.models import (
+    Numerics,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    param_count,
+)
+from repro.models.frontends import audio_stub_features, vision_stub_embeddings
+
+B, S = 2, 16
+
+
+def _inputs(mcfg, key):
+    """(tokens_or_embeds, encoder_features) for a smoke batch."""
+    kt, kf = jax.random.split(key)
+    if mcfg.frontend == "vision_stub":
+        x = vision_stub_embeddings(kt, B, S, mcfg.d_model, jnp.float32)
+    else:
+        x = jax.random.randint(kt, (B, S), 0, mcfg.vocab_size)
+    enc = None
+    if mcfg.is_encoder_decoder:
+        enc = audio_stub_features(kf, B, S, mcfg.d_model, jnp.float32)
+    return x, enc
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_smoke(arch):
+    mcfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), mcfg)
+    x, enc = _inputs(mcfg, jax.random.PRNGKey(1))
+    logits, aux = jax.jit(
+        lambda p, x, e: forward(p, x, mcfg, encoder_features=e)
+    )(params, x, enc)
+    assert logits.shape == (B, S, mcfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_grad_smoke(arch):
+    """One train step's worth of grads: finite, right structure."""
+    mcfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), mcfg)
+    x, enc = _inputs(mcfg, jax.random.PRNGKey(1))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, mcfg.vocab_size)
+
+    def loss_fn(p):
+        logits, aux = forward(p, x, mcfg, encoder_features=enc)
+        ll = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(ll, labels[..., None], axis=-1).mean()
+        return nll + 0.01 * aux
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+    # Gradients actually flow to the first-layer weights.
+    gnorm = sum(float(jnp.abs(g).sum()) for g in flat)
+    assert gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_smoke(arch):
+    mcfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), mcfg)
+    state = init_decode_state(mcfg, B, max_len=32)
+
+    enc_kv = None
+    if mcfg.is_encoder_decoder:
+        from repro.models import encode
+        from repro.models.lm import _cross_kv
+        nx = Numerics(QuantConfig(mode="float"))
+        enc = audio_stub_features(jax.random.PRNGKey(3), B, S, mcfg.d_model,
+                                  jnp.float32)
+        enc_out = encode(params, enc, mcfg, nx)
+        enc_kv = _cross_kv(params, enc_out, mcfg, nx)
+
+    token = jnp.zeros((B,), jnp.int32)
+    step = jax.jit(lambda p, s, t: decode_step(p, s, t, mcfg, enc_kv=enc_kv))
+    for _ in range(3):
+        logits, state = step(params, state, token)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert logits.shape == (B, mcfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(state["position"][0]) == 3
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "granite-moe-1b-a400m",
+                                  "recurrentgemma-2b", "xlstm-350m"])
+def test_abfp_forward_smoke(arch):
+    """The zoo runs end-to-end in ABFP simulation mode (QAT forward)."""
+    mcfg = smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), mcfg)
+    x, enc = _inputs(mcfg, jax.random.PRNGKey(1))
+    nx = Numerics(
+        QuantConfig(mode="abfp_ref", tile_width=32, gain=2.0, noise_lsb=0.5),
+        key=jax.random.PRNGKey(9))
+    logits, _ = jax.jit(
+        lambda p, x, e: forward(p, x, mcfg, Numerics(nx.quant, jax.random.PRNGKey(9)),
+                                encoder_features=e)
+    )(params, x, enc)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # ABFP output differs from float but is correlated with it.
+    logits_f, _ = jax.jit(
+        lambda p, x, e: forward(p, x, mcfg, encoder_features=e)
+    )(params, x, enc)
+    c = np.corrcoef(np.asarray(logits).ravel(), np.asarray(logits_f).ravel())[0, 1]
+    assert not np.allclose(np.asarray(logits), np.asarray(logits_f))
+    assert c > 0.5, c
+
+
+def test_decode_matches_forward_tinyllama():
+    """Teacher-forced forward and step-by-step decode agree (KV-cache
+    correctness)."""
+    mcfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), mcfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0, mcfg.vocab_size)
+    logits_fwd, _ = forward(params, toks, mcfg)
+
+    state = init_decode_state(mcfg, B, max_len=16)
+    outs = []
+    for t in range(8):
+        lg, state = decode_step(params, state, toks[:, t], mcfg)
+        outs.append(lg)
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_fwd), rtol=2e-2, atol=2e-2)
+
+
+def test_decode_matches_forward_hybrid():
+    """Same consistency check through RG-LRU + sliding-window layers."""
+    mcfg = smoke_config("recurrentgemma-2b")
+    params = init_params(jax.random.PRNGKey(0), mcfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0, mcfg.vocab_size)
+    logits_fwd, _ = forward(params, toks, mcfg)
+
+    state = init_decode_state(mcfg, B, max_len=16)
+    outs = []
+    for t in range(8):
+        lg, state = decode_step(params, state, toks[:, t], mcfg)
+        outs.append(lg)
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_fwd), rtol=2e-2, atol=2e-2)
+
+
+def test_decode_matches_forward_ssm():
+    mcfg = smoke_config("xlstm-350m")
+    params = init_params(jax.random.PRNGKey(0), mcfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0, mcfg.vocab_size)
+    logits_fwd, _ = forward(params, toks, mcfg)
+
+    state = init_decode_state(mcfg, B, max_len=16)
+    outs = []
+    for t in range(8):
+        lg, state = decode_step(params, state, toks[:, t], mcfg)
+        outs.append(lg)
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_fwd), rtol=3e-2, atol=3e-2)
+
+
+def test_full_configs_match_assignment():
+    """The registered full configs carry the exact assigned hyperparameters."""
+    expect = {
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+    }
+    for arch, (l, d, h, kv, ff, v) in expect.items():
+        c = get_config(arch)
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.d_ff, c.vocab_size) == (l, d, h, kv, ff, v), arch
+    assert get_config("kimi-k2-1t-a32b").num_experts == 384
+    assert get_config("kimi-k2-1t-a32b").experts_per_token == 8
+    assert get_config("granite-moe-1b-a400m").num_experts == 32
+    assert get_config("gemma-7b").head_dim == 256
+    assert len(SHAPES) == 4
