@@ -1,0 +1,18 @@
+# Developer entry points.  The repo is import-run via PYTHONPATH=src (no
+# install step); every target bakes that in so CI/tier-1 is one invocation.
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test-fast test bench
+
+# Tier-1 fast lane: everything except the @pytest.mark.slow end-to-end runs.
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+# Full suite (slow: distributed dry-runs, train-driver end-to-end).
+test:
+	$(PY) -m pytest -q
+
+bench:
+	$(PY) benchmarks/run.py

@@ -37,12 +37,21 @@ def main():
         params, mcfg,
         QuantConfig(mode="abfp_ref", tile_width=8, gain=1.0, noise_lsb=0.5),
         "abfp t8/g1")
+    # Production path: weights quantized once at engine init (int8 codes +
+    # bf16 scales), every tick runs the packed Pallas kernel.
+    packed_out = serve(
+        params, mcfg,
+        QuantConfig(mode="abfp_packed", tile_width=8, gain=1.0, noise_lsb=0.5),
+        "abfp-packed t8/g1")
 
     agree = sum(float_out[u] == abfp_out[u] for u in float_out)
     print(f"\ngreedy outputs identical for {agree}/{len(float_out)} requests "
           f"at tile 8 / gain 1 (the paper's <1%-loss configuration)")
+    agree_p = sum(float_out[u] == packed_out[u] for u in float_out)
+    print(f"packed serving agrees with float for {agree_p}/{len(float_out)}")
     for u in list(float_out)[:3]:
-        print(f"  req {u}: float={float_out[u]}  abfp={abfp_out[u]}")
+        print(f"  req {u}: float={float_out[u]}  abfp={abfp_out[u]}  "
+              f"packed={packed_out[u]}")
 
 
 if __name__ == "__main__":

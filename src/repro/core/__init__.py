@@ -2,13 +2,16 @@
 
 from repro.core.abfp import (  # noqa: F401
     FLOAT,
+    PackedWeight,
     QuantConfig,
     abfp_matmul,
     abfp_matmul_ste,
     adc,
     ams_noise,
+    dequantize_packed,
     digital_bfp_matmul,
     encode_codes,
+    pack_abfp_weight,
     pad_to_tiles,
     quant_delta,
     quant_levels,

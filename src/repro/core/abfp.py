@@ -41,6 +41,8 @@ class QuantConfig:
       * ``"float"``       — plain (b)f16/f32 matmul, no ABFP (the FLOAT32 baseline)
       * ``"abfp_ref"``    — pure-jnp scan implementation (this module)
       * ``"abfp_kernel"`` — fused Pallas TPU kernel (``repro.kernels``)
+      * ``"abfp_packed"`` — packed Pallas kernel over pre-quantized weights
+        (``pack_abfp_weight``): the quantize-once serving path
     """
 
     tile_width: int = 128          # n — vector length sharing one scale
@@ -224,6 +226,156 @@ def encode_codes(v_hat: Array, bits: int) -> Array:
     """
     lvl = float(quant_levels(bits))
     return jnp.clip(jnp.round(v_hat * lvl), -lvl, lvl).astype(code_dtype(bits))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedWeight:
+    """Pre-quantized ABFP weight: quantize once, serve forever.
+
+    The paper's AMS device programs weight tiles into the analog array once
+    and then only streams activations; this container is the digital analog.
+    ``pack_abfp_weight`` runs the weight side of Eq. 2 (max-abs tile scale,
+    bf16-rounded, then round-half-even integer encoding) ahead of time, so
+    the serving hot path never touches the original float weights.
+
+    Layout (supports leading batch axes for scan-stacked / MoE params):
+
+      codes : int8     (..., Kp, Np)  integer codes in [-L_w, +L_w], row
+                                      ``t*n + i`` is element ``i`` of K-tile
+                                      ``t`` (i.e. the natural (K, N) layout,
+                                      zero-padded to Kp = ceil(K/n)*n rows
+                                      and Np = ceil(N/128)*128 lane-aligned
+                                      columns, so the serving hot path never
+                                      re-pads the weight per call)
+      scales: bfloat16 (..., T, Np)   per-(tile, out-column) scales, T=Kp/n
+                                      (``cfg.scale_dtype``; bf16 by default)
+
+    Static metadata (pytree aux, hashable):
+
+      k          — the original, un-padded K (rows beyond k are zero codes
+                   with zero scales: they contribute exactly 0)
+      n_cols     — the original, un-padded N (columns beyond n_cols are
+                   zero codes with zero scales; sliced off the output)
+      tile_width — n, the ABFP tile width the codes were packed for
+      bits_w     — b_W used at pack time (int8 requires bits_w <= 8)
+
+    The represented value lattice is ``codes * delta_w * scales`` — exactly
+    the lattice ``quantize_weight_tiles`` / the Pallas kernel derive at run
+    time, so packed and unpacked execution are bit-identical.
+    """
+
+    codes: Array
+    scales: Array
+    k: int
+    n_cols: int
+    tile_width: int
+    bits_w: int
+
+    def tree_flatten(self):
+        return (self.codes, self.scales), (
+            self.k, self.n_cols, self.tile_width, self.bits_w)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scales = children
+        return cls(codes, scales, *aux)
+
+    @property
+    def kp(self) -> int:
+        return self.codes.shape[-2]
+
+    @property
+    def n_out(self) -> int:
+        return self.n_cols
+
+    @property
+    def n_padded(self) -> int:
+        return self.codes.shape[-1]
+
+    @property
+    def num_tiles(self) -> int:
+        return self.scales.shape[-2]
+
+    @property
+    def shape(self):
+        """Logical (un-padded) weight shape, leading batch axes included."""
+        return self.codes.shape[:-2] + (self.k, self.n_cols)
+
+    @property
+    def ndim(self) -> int:
+        return self.codes.ndim
+
+    def __getitem__(self, idx) -> "PackedWeight":
+        """Index leading batch axes (e.g. MoE expert selection) — the packed
+        analogue of ``params['wi'][ex]``."""
+        return PackedWeight(self.codes[idx], self.scales[idx],
+                            self.k, self.n_cols, self.tile_width, self.bits_w)
+
+    def nbytes(self) -> int:
+        """HBM footprint of the packed representation."""
+        return self.codes.size * self.codes.dtype.itemsize \
+            + self.scales.size * self.scales.dtype.itemsize
+
+
+_LANE = 128  # TPU lane width; packed N is pre-aligned to it at pack time.
+
+
+def pack_abfp_weight(w: Array, cfg: QuantConfig) -> PackedWeight:
+    """Quantize a (..., K, N) weight to ABFP once, for the packed serving path.
+
+    Bit-identical to the quantization the kernel / ``quantize_weight_tiles``
+    perform per call: same ``scale_dtype``-rounded max-abs scales, same
+    round-half-even integer encoding.  Codes are stored as int8 (requires
+    ``bits_w <= 8``; L_w <= 127), halving weight HBM traffic vs bf16 codes
+    and quartering it vs f32 weights.  N is zero-padded to the 128-lane
+    boundary here, once, so the kernel wrapper never re-pads the weight on
+    the hot path (zero columns carry zero scales: exact no-ops).
+
+    ``scale_percentile`` configs are rejected: the Pallas kernels (packed
+    and unpacked) implement the paper's max-abs scaling only — percentile
+    scaling lives in the ``abfp_ref``/scan path.
+    """
+    if quant_levels(cfg.bits_w) > 127:
+        raise ValueError(
+            f"pack_abfp_weight stores int8 codes; bits_w={cfg.bits_w} "
+            f"(L_w={quant_levels(cfg.bits_w)}) does not fit")
+    if cfg.scale_percentile is not None:
+        raise ValueError(
+            "pack_abfp_weight supports max-abs scales only (the Pallas "
+            "kernels do not implement scale_percentile; use mode='abfp_ref')")
+    n = cfg.tile_width
+    k, n_cols = w.shape[-2], w.shape[-1]
+    w = pad_to_tiles(w.astype(jnp.float32), n, axis=-2)
+    w = pad_to_tiles(w, _LANE, axis=-1)
+    lead = w.shape[:-2]
+    kp, npad = w.shape[-2], w.shape[-1]
+    t = kp // n
+    wt = w.reshape(*lead, t, n, npad)                       # (..., T, n, Np)
+    s_w = tile_scales(jnp.moveaxis(wt, -2, -1), cfg.scale_dtype)
+    w_hat = wt / safe_scale(s_w)[..., None, :]              # (..., T, n, Np)
+    codes = encode_codes(w_hat, cfg.bits_w).astype(jnp.int8)
+    return PackedWeight(
+        codes=codes.reshape(*lead, kp, npad),
+        scales=s_w.astype(cfg.scale_dtype),
+        k=k, n_cols=n_cols, tile_width=n, bits_w=cfg.bits_w,
+    )
+
+
+def dequantize_packed(pw: PackedWeight) -> Array:
+    """Packed codes + scales -> the quantized-value lattice, (..., k, N) f32.
+
+    ``codes * delta_w * scales`` per Eq. 2; used by the STE backward (the
+    gradient sees the values the forward actually multiplied by) and tests.
+    """
+    n = pw.tile_width
+    lead = pw.codes.shape[:-2]
+    ct = pw.codes.astype(jnp.float32).reshape(
+        *lead, pw.num_tiles, n, pw.n_padded)
+    s = pw.scales.astype(jnp.float32)[..., :, None, :]       # (..., T, 1, Np)
+    d = jnp.float32(quant_delta(pw.bits_w))
+    w = (ct * d * s).reshape(*lead, pw.kp, pw.n_padded)
+    return w[..., :pw.k, :pw.n_cols]
 
 
 def quantize_weight_tiles(w: Array, cfg: QuantConfig):

@@ -5,7 +5,10 @@ per-tile ADC in plain XLA materializes a (K/n, M, N) partial-product tensor.
 The Pallas kernel fuses scale/quantize/dot/ADC/accumulate in VMEM.
 """
 
-from repro.kernels.abfp_matmul import abfp_matmul_pallas  # noqa: F401
+from repro.kernels.abfp_matmul import (  # noqa: F401
+    abfp_matmul_packed_pallas,
+    abfp_matmul_pallas,
+)
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
-from repro.kernels.ops import dense  # noqa: F401
+from repro.kernels.ops import dense, dense_packed  # noqa: F401
 from repro.kernels.ref import abfp_matmul_ref  # noqa: F401

@@ -26,6 +26,47 @@ TPU adaptation note (DESIGN.md §2): the paper's analog device processes one
 n-wide tile per clock; here tk tiles are batched into one MXU dot_general so
 small n (8/32) still feeds the 128x128 systolic array efficiently — the tile
 *semantics* (per-tile ADC quantization) are preserved exactly.
+
+Packed-weight variant (``abfp_matmul_packed_pallas``)
+-----------------------------------------------------
+
+The kernel above re-derives the weight scales and integer codes on every
+grid step — M/bm times per call, and once per decode tick in serving — even
+though weights are static.  The packed variant consumes a pre-quantized
+``repro.core.abfp.PackedWeight`` instead:
+
+  codes : int8     (Kp, Np)  integer weight codes in [-L_w, +L_w]; row
+                             ``t*n + i`` is element i of K-tile t.  Kp is K
+                             zero-padded to a multiple of the tile width n;
+                             Np is N zero-padded to the 128-lane boundary
+                             at PACK time (padding rows/columns are code 0
+                             under scale 0, contributing exactly 0).
+  scales: bf16 (T, Np)       per-(tile, out-column) scales, T = Kp/n,
+                             ``cfg.scale_dtype``-rounded (bf16 by default)
+                             exactly as the in-kernel ``max|w| -> bf16``
+                             derivation would round them.
+
+Padding contract: the wrapper zero-pads Kp -> multiple of bk and
+Np -> multiple of bn at call time and slices the output back to the
+caller's logical (M, N); with the default (or any 128-multiple) bn these
+pads are no-ops, so the hot path streams codes/scales exactly as stored
+— no per-call weight re-materialization.  Max-abs scales only
+(``scale_percentile`` configs are rejected at pack time).
+
+Per grid step the packed kernel loads the int8 code block + bf16 scale block
+straight from HBM, casts, and goes directly to the MXU dot — deleting the
+per-step weight max/round/clip work and halving weight-side HBM bytes
+(int8 codes vs bf16, plus T/K-sized scales).  Output is bit-identical to
+``abfp_matmul_pallas`` at matching block sizes — same integer lattice
+(pack-time scales are bf16-rounded exactly as in-kernel), same f32 ADC
+constant, same noise hash and salt layout, same accumulation order — and
+matches the einsum oracle to the usual f32 accumulation-order ULP
+tolerance (the oracle contracts all T tiles in one einsum).
+
+Decode-shape specialization: when ``bm`` is not given, both wrappers pick
+``bm = min(DEFAULT_BM, ceil8(M))`` so a 1–8 row decode matmul runs an
+(8, bk) activation block instead of being zero-padded to 128 rows — a 16x
+cut in per-step activation work at M=1.
 """
 
 from __future__ import annotations
@@ -38,10 +79,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.abfp import QuantConfig
+from repro.core.abfp import PackedWeight, QuantConfig
+from repro.kernels._compat import CompilerParams as _CompilerParams
 
 DEFAULT_BM = 128
 DEFAULT_BN = 128
+
+
+def auto_bm(m: int) -> int:
+    """Decode-shape specialization: smallest f32-legal row block covering m.
+
+    A decode step has m in 1..8; padding it to the 128-row default block
+    wastes 16x the activation-side work (and VMEM).  f32 sublane tiling
+    needs multiples of 8, so clamp to [8, DEFAULT_BM].
+    """
+    return min(DEFAULT_BM, max(8, ((m + 7) // 8) * 8))
 
 
 def default_bk(n: int, k: int) -> int:
@@ -79,58 +131,32 @@ def _hash_uniform(shape, seed, salt):
 
 
 # ---------------------------------------------------------------------------
-# Kernel body
+# Kernel bodies (shared ABFP core; weight source is the only difference)
 # ---------------------------------------------------------------------------
 
 
-def _abfp_matmul_kernel(
-    seed_ref,  # SMEM (1,) int32
-    x_ref,     # VMEM (bm, bk)
-    w_ref,     # VMEM (bk, bn)
-    o_ref,     # VMEM (bm, bn)
-    acc_ref,   # VMEM scratch (bm, bn) f32
-    *,
-    cfg: QuantConfig,
-    tk: int,
-    n: int,
-):
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    k = pl.program_id(2)
-    nk = pl.num_programs(2)
+def _abfp_contrib(xt, wq, sw, seed_ref, cfg: QuantConfig, tk: int, n: int):
+    """Shared per-grid-step ABFP math: everything except how (wq, sw) were
+    obtained.  BOTH kernels route through this one function so the
+    packed == unpacked bit-identity contract lives in exactly one place.
 
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    xt: (bm, tk, n) f32 activation tiles;  wq: (tk, n, bn) integer weight
+    codes, already cast to the MXU code dtype;  sw: (tk, bn) f32 weight
+    scales (``scale_dtype``-rounded).  Returns the (bm, bn) f32 contribution
+    of this K block.
+    """
+    bm = xt.shape[0]
+    bn = wq.shape[-1]
 
-    bm, bk = x_ref.shape
-    bn = w_ref.shape[1]
-
-    x = x_ref[...].astype(jnp.float32)
-    w = w_ref[...].astype(jnp.float32)
-
-    xt = x.reshape(bm, tk, n)                       # (bm, tk, n)
-    wt = w.reshape(tk, n, bn)                       # (tk, n, bn)
-
-    # Adaptive per-tile scales, stored in bf16 (paper Sec. III).
+    # Adaptive per-tile activation scales (paper Sec. III) + DAC encode
+    # (Eq. 2).  Activations are dynamic: their scales/codes must be derived
+    # per call, unlike the static weight side.
     sx = jnp.max(jnp.abs(xt), axis=2)               # (bm, tk)
-    sw = jnp.max(jnp.abs(wt), axis=1)               # (tk, bn)
     sx = sx.astype(cfg.scale_dtype).astype(jnp.float32)
-    sw = sw.astype(cfg.scale_dtype).astype(jnp.float32)
     sx_safe = jnp.where(sx == 0.0, 1.0, sx)
-    sw_safe = jnp.where(sw == 0.0, 1.0, sw)
-
-    # Eq. 2: normalize and encode operands as integer codes (DAC).
     lx = jnp.float32(2 ** (cfg.bits_x - 1) - 1)
-    lw = jnp.float32(2 ** (cfg.bits_w - 1) - 1)
     xq = jnp.clip(jnp.round(xt / sx_safe[:, :, None] * lx), -lx, lx)
-    wq = jnp.clip(jnp.round(wt / sw_safe[:, None, :] * lw), -lw, lw)
-    # bf16 codes are exact for <= 9-bit operands and feed the MXU at its
-    # bf16 rate (vs ~1/8 rate for f32) — see core.abfp.code_dtype.
-    from repro.core.abfp import code_dtype
-    cdt = code_dtype(max(cfg.bits_x, cfg.bits_w))
-    xq = xq.astype(cdt)
-    wq = wq.astype(cdt)
+    xq = xq.astype(wq.dtype)
 
     # Batched MXU dot over the tk tiles: (tk, bm, n) @ (tk, n, bn).
     # Integer-valued operands: the f32-accumulated dot is EXACT
@@ -147,8 +173,12 @@ def _abfp_matmul_kernel(
     # so round-half-even ties resolve identically.
     v = p * jnp.float32(cfg.adc_code_scale)
     if cfg.noise_lsb > 0.0:
-        # One independent uniform noise draw per partial output, in LSB units.
-        salt = (i * pl.num_programs(1) + j) * nk + k
+        # One independent uniform noise draw per partial output, in LSB
+        # units, salted by the grid position.
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        k = pl.program_id(2)
+        salt = (i * pl.num_programs(1) + j) * pl.num_programs(2) + k
         u = _hash_uniform(
             (tk * bm, bn),
             seed_ref[0],
@@ -158,11 +188,49 @@ def _abfp_matmul_kernel(
     ly = jnp.float32(2 ** (cfg.bits_y - 1) - 1)
     yq = jnp.clip(jnp.round(v), -ly, ly) * jnp.float32(cfg.bin_y)
 
-    # Eq. 6: rescale partials and accumulate in FLOAT32.
-    contrib = jnp.sum(
+    # Eq. 6: rescale partials and sum over the tk tiles in FLOAT32.
+    return jnp.sum(
         yq * sx.T[:, :, None] * sw[:, None, :], axis=0
     ) / jnp.float32(cfg.gain)                        # (bm, bn)
-    acc_ref[...] += contrib
+
+
+def _abfp_matmul_kernel(
+    seed_ref,  # SMEM (1,) int32
+    x_ref,     # VMEM (bm, bk)
+    w_ref,     # VMEM (bk, bn)
+    o_ref,     # VMEM (bm, bn)
+    acc_ref,   # VMEM scratch (bm, bn) f32
+    *,
+    cfg: QuantConfig,
+    tk: int,
+    n: int,
+):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bm, bk = x_ref.shape
+    bn = w_ref.shape[1]
+
+    xt = x_ref[...].astype(jnp.float32).reshape(bm, tk, n)
+    wt = w_ref[...].astype(jnp.float32).reshape(tk, n, bn)
+
+    # Weight side, re-derived every grid step (the packed kernel skips
+    # this): scale_dtype-rounded max-abs scales + DAC encode (Eq. 2).
+    sw = jnp.max(jnp.abs(wt), axis=1)               # (tk, bn)
+    sw = sw.astype(cfg.scale_dtype).astype(jnp.float32)
+    sw_safe = jnp.where(sw == 0.0, 1.0, sw)
+    lw = jnp.float32(2 ** (cfg.bits_w - 1) - 1)
+    wq = jnp.clip(jnp.round(wt / sw_safe[:, None, :] * lw), -lw, lw)
+    # bf16 codes are exact for <= 9-bit operands and feed the MXU at its
+    # bf16 rate (vs ~1/8 rate for f32) — see core.abfp.code_dtype.
+    from repro.core.abfp import code_dtype
+    wq = wq.astype(code_dtype(max(cfg.bits_x, cfg.bits_w)))
+
+    acc_ref[...] += _abfp_contrib(xt, wq, sw, seed_ref, cfg, tk, n)
 
     @pl.when(k == nk - 1)
     def _done():
@@ -187,7 +255,7 @@ def abfp_matmul_pallas(
     cfg: QuantConfig,
     seed: Optional[jax.Array] = None,
     *,
-    bm: int = DEFAULT_BM,
+    bm: Optional[int] = None,
     bn: int = DEFAULT_BN,
     bk: Optional[int] = None,
     interpret: Optional[bool] = None,
@@ -196,7 +264,8 @@ def abfp_matmul_pallas(
 
     ``seed``: int32 scalar seeding the in-kernel noise hash (required when
     cfg.noise_lsb > 0).  ``interpret`` defaults to True off-TPU so the same
-    call validates on CPU and runs compiled on TPU.
+    call validates on CPU and runs compiled on TPU.  ``bm`` defaults to the
+    decode-aware ``auto_bm`` (8-row blocks for 1–8 row decode matmuls).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -209,6 +278,8 @@ def abfp_matmul_pallas(
     k_dim, n_dim = w.shape
     x2 = x.reshape(-1, k_dim).astype(jnp.float32)
     m_dim = x2.shape[0]
+    if bm is None:
+        bm = auto_bm(m_dim)
 
     mp, kp, np_ = _ceil_to(m_dim, bm), _ceil_to(k_dim, bk), _ceil_to(n_dim, bn)
     x2 = jnp.pad(x2, ((0, mp - m_dim), (0, kp - k_dim)))
@@ -236,10 +307,156 @@ def abfp_matmul_pallas(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), cfg.out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(seed, x2, wp)
+
+    return out[:m_dim, :n_dim].reshape(*batch_shape, n_dim)
+
+
+# ---------------------------------------------------------------------------
+# Packed-weight kernel: pre-quantized int8 codes + bf16 scales from HBM
+# ---------------------------------------------------------------------------
+
+
+def _abfp_matmul_packed_kernel(
+    seed_ref,  # SMEM (1,) int32
+    x_ref,     # VMEM (bm, bk) f32
+    wc_ref,    # VMEM (bk, bn) int8 weight codes
+    sw_ref,    # VMEM (tk, bn) scale_dtype weight scales
+    o_ref,     # VMEM (bm, bn)
+    acc_ref,   # VMEM scratch (bm, bn) f32
+    *,
+    cfg: QuantConfig,
+    tk: int,
+    n: int,
+):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bm, bk = x_ref.shape
+    bn = wc_ref.shape[1]
+
+    xt = x_ref[...].astype(jnp.float32).reshape(bm, tk, n)
+
+    # Weight side: NO max/round/clip — codes and scales come straight from
+    # HBM.  int8 -> bf16/f32 cast is exact for |code| <= 127.
+    from repro.core.abfp import code_dtype
+    cdt = code_dtype(max(cfg.bits_x, cfg.bits_w))
+    wq = wc_ref[...].astype(cdt).reshape(tk, n, bn)  # (tk, n, bn)
+    sw = sw_ref[...].astype(jnp.float32)             # (tk, bn)
+
+    acc_ref[...] += _abfp_contrib(xt, wq, sw, seed_ref, cfg, tk, n)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "bm", "bn", "bk", "interpret")
+)
+def abfp_matmul_packed_pallas(
+    x: jax.Array,
+    pw: PackedWeight,
+    cfg: QuantConfig,
+    seed: Optional[jax.Array] = None,
+    *,
+    bm: Optional[int] = None,
+    bn: int = DEFAULT_BN,
+    bk: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """y = ABFP(x @ w) from a pre-packed weight; x: (..., K) -> (..., N).
+
+    ``pw`` must be a 2-D ``PackedWeight`` (no leading batch axes) packed at
+    this ``cfg``'s tile width / bits_w.  Bit-identical to
+    ``abfp_matmul_pallas(x, w, cfg, seed)`` at matching block sizes,
+    without re-deriving weight scales/codes on every grid step.
+    """
+    if pw.codes.ndim != 2:
+        raise ValueError(
+            f"packed kernel takes a 2-D PackedWeight, got codes "
+            f"{pw.codes.shape}; index leading axes first")
+    if pw.tile_width != cfg.tile_width or pw.bits_w != cfg.bits_w:
+        raise ValueError(
+            f"PackedWeight(n={pw.tile_width}, bits_w={pw.bits_w}) does not "
+            f"match cfg(n={cfg.tile_width}, bits_w={cfg.bits_w})")
+    if pw.scales.dtype != jnp.dtype(cfg.scale_dtype):
+        raise ValueError(
+            f"PackedWeight scales are {pw.scales.dtype} but cfg.scale_dtype "
+            f"is {jnp.dtype(cfg.scale_dtype)}; re-pack at this config")
+    if cfg.noise_lsb > 0.0 and bn % 128 != 0:
+        # The noise salt depends on the column-block count; only bn multiples
+        # of the 128-lane pre-padding guarantee the packed and unpacked grids
+        # (and thus their noise streams) coincide.
+        raise ValueError(
+            f"noise_lsb > 0 requires bn to be a multiple of 128 for the "
+            f"packed kernel (got bn={bn}): other block widths change the "
+            f"grid vs the unpacked kernel and break noise bit-identity")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = cfg.tile_width
+    k_dim, n_dim = pw.k, pw.n_out
+    if x.shape[-1] != k_dim:
+        raise ValueError(f"x K dim {x.shape[-1]} != packed weight K {k_dim}")
+    if bk is None:
+        bk = default_bk(n, k_dim)
+    assert bk % n == 0, (bk, n)
+
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape(-1, k_dim).astype(jnp.float32)
+    m_dim = x2.shape[0]
+    if bm is None:
+        bm = auto_bm(m_dim)
+
+    # Pad x's K to the packed Kp (zero activations against real tiles are
+    # exact no-ops), then everything to block multiples.  The weight is
+    # already lane-aligned from pack time, so for the default bn (and any
+    # bn that is a multiple of 128) the pads below are no-ops and the hot
+    # path streams pw.codes/pw.scales exactly as stored.
+    kp0, npad0 = pw.kp, pw.n_padded
+    mp, kp, np_ = _ceil_to(m_dim, bm), _ceil_to(kp0, bk), _ceil_to(npad0, bn)
+    x2 = jnp.pad(x2, ((0, mp - m_dim), (0, kp - k_dim)))
+    wc, sw = pw.codes, pw.scales
+    if kp > kp0 or np_ > npad0:
+        wc = jnp.pad(wc, ((0, kp - kp0), (0, np_ - npad0)))
+        sw = jnp.pad(sw, ((0, (kp - kp0) // n), (0, np_ - npad0)))
+
+    if seed is None:
+        if cfg.noise_lsb > 0.0:
+            raise ValueError("noise_lsb > 0 requires a seed")
+        seed = jnp.zeros((1,), jnp.int32)
+    else:
+        seed = jnp.asarray(seed, jnp.int32).reshape((1,))
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    tk = bk // n
+
+    kernel = functools.partial(
+        _abfp_matmul_packed_kernel, cfg=cfg, tk=tk, n=n)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # seed
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),        # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),        # codes
+            pl.BlockSpec((tk, bn), lambda i, j, k: (k, j)),        # scales
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), cfg.out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(seed, x2, wc, sw)
 
     return out[:m_dim, :n_dim].reshape(*batch_shape, n_dim)

@@ -4,10 +4,19 @@
   * ``mode="float"``       — plain matmul in the operand dtype (FLOAT baseline)
   * ``mode="abfp_ref"``    — pure-jnp scan ABFP (core.abfp.abfp_matmul)
   * ``mode="abfp_kernel"`` — fused Pallas kernel (abfp_matmul_pallas)
+  * ``mode="abfp_packed"`` — packed Pallas kernel: the weight is quantized
+    once (``pack_abfp_weight``) and the kernel streams int8 codes + bf16
+    scales from HBM.  ``dense`` packs a raw array on the fly (so QAT code
+    can flip the mode switch); ``dense_packed`` takes an already-packed
+    ``PackedWeight`` — the quantize-once serving path.
 
 All ABFP modes carry the straight-through estimator (paper Eq. 8): the
 backward pass is that of the plain matmul, accumulated in FLOAT32 — this is
-what makes the same call usable for inference simulation AND for QAT.
+what makes the same call usable for inference simulation AND for QAT.  For
+``dense_packed`` the original float weight no longer exists, so the STE
+weight matmul uses the dequantized lattice (the values the forward actually
+multiplied by) and the packed weight itself gets a zero cotangent — packed
+weights are frozen by construction.
 """
 
 from __future__ import annotations
@@ -17,9 +26,19 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.abfp import QuantConfig, abfp_matmul
-from repro.kernels.abfp_matmul import abfp_matmul_pallas
+from repro.core.abfp import (
+    PackedWeight,
+    QuantConfig,
+    abfp_matmul,
+    dequantize_packed,
+    pack_abfp_weight,
+)
+from repro.kernels.abfp_matmul import (
+    abfp_matmul_packed_pallas,
+    abfp_matmul_pallas,
+)
 
 
 def _key_to_seed(key: Optional[jax.Array]) -> Optional[jax.Array]:
@@ -44,6 +63,9 @@ def _dense_fwd_impl(x, w, cfg, key):
         return abfp_matmul(x, w, cfg, key)
     if cfg.mode == "abfp_kernel":
         return abfp_matmul_pallas(x, w, cfg, _key_to_seed(key))
+    if cfg.mode == "abfp_packed":
+        pw = pack_abfp_weight(w, cfg)
+        return abfp_matmul_packed_pallas(x, pw, cfg, _key_to_seed(key))
     raise ValueError(f"unknown quant mode: {cfg.mode!r}")
 
 
@@ -63,3 +85,39 @@ def _dense_bwd(cfg, res, g):
 
 
 dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Pre-packed weights: the quantize-once serving entry point
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def dense_packed(x: jax.Array, pw: PackedWeight, cfg: QuantConfig,
+                 key: Optional[jax.Array] = None) -> jax.Array:
+    """x (..., K) @ packed weight (K, N) -> (..., N) via the packed kernel.
+
+    ``pw`` is produced once by ``pack_abfp_weight`` (or ``pack_model_params``
+    over a whole model); every call skips the weight max/round/clip work the
+    plain kernel redoes per grid step.
+    """
+    return abfp_matmul_packed_pallas(x, pw, cfg, _key_to_seed(key))
+
+
+def _dense_packed_fwd(x, pw, cfg, key):
+    return dense_packed(x, pw, cfg, key), (x, pw)
+
+
+def _dense_packed_bwd(cfg, res, g):
+    # STE (Eq. 8) against the dequantized lattice; packed leaves are frozen.
+    x, pw = res
+    g32 = g.astype(jnp.float32)
+    w = dequantize_packed(pw)                                # (K, N) f32
+    dx = jnp.matmul(g32, w.T).astype(x.dtype)
+    zero_codes = np.zeros(pw.codes.shape, dtype=jax.dtypes.float0)
+    dpw = PackedWeight(zero_codes, jnp.zeros_like(pw.scales),
+                       pw.k, pw.n_cols, pw.tile_width, pw.bits_w)
+    return dx, dpw, None
+
+
+dense_packed.defvjp(_dense_packed_fwd, _dense_packed_bwd)

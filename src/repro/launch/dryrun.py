@@ -255,6 +255,9 @@ def _run_cell(arch: str, shape_name: str, mesh, mesh_name: str, quant: str,
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # jax < 0.5 returns a one-element list of dicts; newer returns the dict.
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
     hlo = compiled.as_text()
     # Loop-aware costs: cost_analysis() counts while bodies (= every
     # lax.scan: layers, microbatches, attention chunks) only ONCE; the HLO

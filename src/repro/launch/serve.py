@@ -27,7 +27,12 @@ def main() -> None:
     ap.add_argument("--capacity", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--quant", choices=("float", "abfp"), default="float")
+    ap.add_argument("--quant",
+                    choices=("float", "abfp", "abfp-kernel", "abfp-packed"),
+                    default="float",
+                    help="abfp: pure-jnp scan; abfp-kernel: fused Pallas; "
+                         "abfp-packed: weights quantized once at init, "
+                         "packed Pallas kernel per tick")
     ap.add_argument("--tile", type=int, default=128)
     ap.add_argument("--gain", type=float, default=8.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -35,9 +40,12 @@ def main() -> None:
 
     mcfg = smoke_config(args.arch) if args.reduced else get_config(args.arch)
     params = init_params(jax.random.PRNGKey(args.seed), mcfg)
-    quant = (QuantConfig(mode="abfp_ref", tile_width=args.tile,
+    mode = {"float": "float", "abfp": "abfp_ref",
+            "abfp-kernel": "abfp_kernel",
+            "abfp-packed": "abfp_packed"}[args.quant]
+    quant = (QuantConfig(mode=mode, tile_width=args.tile,
                          gain=args.gain, noise_lsb=0.5)
-             if args.quant == "abfp" else QuantConfig(mode="float"))
+             if mode != "float" else QuantConfig(mode="float"))
 
     print(f"[serve] {args.arch}: {param_count(params)/1e6:.1f}M params, "
           f"quant={args.quant}")

@@ -20,4 +20,8 @@ from repro.models.lm import (  # noqa: F401
     init_params,
     param_count,
 )
+from repro.models.packing import (  # noqa: F401
+    pack_model_params,
+    packed_param_bytes,
+)
 from repro.models import frontends, moe, recurrent  # noqa: F401

@@ -16,8 +16,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.abfp import QuantConfig
+from repro.core.abfp import PackedWeight, QuantConfig
 from repro.kernels.ops import dense as quant_dense
+from repro.kernels.ops import dense_packed
 
 Array = jax.Array
 
@@ -44,12 +45,16 @@ class Numerics:
         key = None if self._key is None else jax.random.fold_in(self._key, idx)
         return Numerics(self.quant, key)
 
-    def dense(self, x: Array, w: Array) -> Array:
+    def dense(self, x: Array, w) -> Array:
         key = None
         if self._key is not None and self.quant.noise_lsb > 0.0 \
                 and self.quant.mode != "float":
             key = jax.random.fold_in(self._key, self._count)
         self._count += 1
+        if isinstance(w, PackedWeight):
+            # Quantize-once serving path: the weight was packed at engine
+            # init (pack_model_params); skip re-quantization entirely.
+            return dense_packed(x, w, self.quant, key)
         return quant_dense(x, w, self.quant, key)
 
 

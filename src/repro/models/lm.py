@@ -220,10 +220,13 @@ def _embed(params, tokens_or_embeds, mcfg, positions):
 
 
 def _lm_head(params, x, mcfg, nx: Numerics):
-    if mcfg.tie_embeddings:
-        w = params["embed"].T
-    else:
+    # An explicit "lm_head" entry wins even for tied embeddings: the packed
+    # serving path (models.packing) inserts a pre-quantized embed.T there.
+    if "lm_head" in params:
         w = params["lm_head"]
+    else:
+        assert mcfg.tie_embeddings
+        w = params["embed"].T
     return nx.dense(x, w).astype(jnp.float32)
 
 

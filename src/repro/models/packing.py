@@ -1,0 +1,91 @@
+"""Whole-model ABFP weight packing: quantize once, serve forever.
+
+``pack_model_params`` walks a model param tree and replaces every dense
+(weight-activation matmul) weight with a ``repro.core.abfp.PackedWeight``
+— int8 tile codes + bf16 per-(tile, column) scales — so the serving engine
+never re-derives weight scales/codes on the hot path.  This is the digital
+analogue of the paper's AMS deployment: weight tiles are programmed into
+the analog array once, then only activations stream through.
+
+What gets packed (by leaf name, matching the init_* constructors):
+
+  * attention projections        wq wk wv wo        (also xLSTM mLSTM's)
+  * MLP / MoE expert weights     wi wg wo
+  * recurrent block projections  w_gate w_in w_rg w_ig w_out
+                                 w_up w_down w_if w_x
+  * the LM head                  lm_head (inserted for tied embeddings:
+                                 ``embed.T`` is packed under "lm_head" and
+                                 ``_lm_head`` picks it up preferentially)
+
+Leading batch axes (scan-stacked groups (NG, K, N); MoE experts
+(..., E, K, N)) are preserved — ``pack_abfp_weight`` packs the trailing
+(K, N) axes and ``PackedWeight`` slices/indexes like any pytree, so
+``jax.lax.scan`` over groups and ``params["wi"][ex]`` work unchanged.
+
+Embedding tables (gather, not matmul), norm scales/biases, and router
+weights (tiny, range-sensitive — paper Sec. V keeps them digital) stay in
+their original dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.core.abfp import PackedWeight, QuantConfig, pack_abfp_weight
+
+# Leaf names that feed Numerics.dense as the weight operand.
+DENSE_WEIGHT_NAMES = frozenset({
+    "wq", "wk", "wv", "wo", "wi", "wg",
+    "w_gate", "w_in", "w_rg", "w_ig", "w_out",
+    "w_up", "w_down", "w_if", "w_x",
+    "lm_head",
+})
+
+
+def _leaf_name(path) -> str:
+    """Last dict key / attr name on a tree path."""
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "name", getattr(last, "idx", last))))
+
+
+def pack_model_params(params: dict, cfg: QuantConfig,
+                      mcfg: Any = None) -> dict:
+    """Return a copy of ``params`` with all dense weights pre-packed.
+
+    ``cfg`` supplies the tile width / bit widths the weights are packed
+    for; serving must then run with a config whose tile_width and bits_w
+    match (the packed kernel validates this).  ``mcfg`` (optional
+    ModelConfig) enables the tied-embeddings LM-head insertion.
+    """
+
+    def pack(path, leaf):
+        if isinstance(leaf, PackedWeight):
+            return leaf
+        if _leaf_name(path) in DENSE_WEIGHT_NAMES and getattr(
+                leaf, "ndim", 0) >= 2:
+            return pack_abfp_weight(leaf, cfg)
+        return leaf
+
+    packed = jax.tree_util.tree_map_with_path(pack, params)
+
+    tied = bool(getattr(mcfg, "tie_embeddings", False)) \
+        and "lm_head" not in params
+    if tied:
+        # The tied head multiplies by embed.T; pack that transpose once so
+        # decode never touches the float embedding table for the head.
+        packed["lm_head"] = pack_abfp_weight(params["embed"].T, cfg)
+    return packed
+
+
+def packed_param_bytes(params) -> int:
+    """Total HBM bytes of a (possibly partially) packed param tree."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, PackedWeight)):
+        if isinstance(leaf, PackedWeight):
+            total += leaf.nbytes()
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total

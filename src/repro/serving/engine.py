@@ -9,7 +9,11 @@ length, recurrent states).
 
 Numerics are pluggable: ``QuantConfig(mode="abfp_ref")`` serves the model
 exactly as the AMS device would compute it (the paper's deployment target),
-``mode="float"`` is the FLOAT32 reference.
+``mode="float"`` is the FLOAT32 reference.  ``mode="abfp_packed"`` is the
+production path: all dense weights are quantized ONCE at engine init
+(int8 tile codes + bf16 scales, ``models.packing``) and every tick runs the
+packed Pallas kernel — no per-token weight re-quantization, half the
+weight HBM traffic, and decode-shaped (small-row-block) matmul grids.
 """
 
 from __future__ import annotations
@@ -43,6 +47,12 @@ class ServingEngine:
                  max_len: int = 512,
                  quant: QuantConfig = QuantConfig(mode="float"),
                  seed: int = 0):
+        if quant.mode == "abfp_packed":
+            # Quantize-once: pack every dense weight at admission time so
+            # the per-tick decode path only streams int8 codes + bf16
+            # scales (the paper's program-the-array-once deployment).
+            from repro.models.packing import pack_model_params
+            params = pack_model_params(params, quant, mcfg)
         self.params = params
         self.mcfg = mcfg
         self.capacity = capacity

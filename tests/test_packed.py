@@ -1,0 +1,316 @@
+"""Packed ABFP weights: pack-once correctness, bit-identity, and plumbing.
+
+The packed serving path must be indistinguishable (to the bit) from the
+quantize-every-call kernel: ``pack_abfp_weight`` runs the identical weight
+quantization (bf16-rounded max-abs scales, round-half-even int codes) ahead
+of time, and ``abfp_matmul_packed_pallas`` shares the ADC constant, noise
+hash, salt layout, and accumulation order with ``abfp_matmul_pallas``.
+Against the einsum oracle (which contracts all tiles in one einsum) the
+match is to f32 accumulation-order ULP, same as the unpacked kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.abfp import (
+    QuantConfig,
+    dequantize_packed,
+    pack_abfp_weight,
+    quant_delta,
+    quantize_weight_tiles,
+)
+from repro.kernels.abfp_matmul import (
+    abfp_matmul_packed_pallas,
+    abfp_matmul_pallas,
+    auto_bm,
+)
+from repro.kernels.ops import dense, dense_packed
+from repro.kernels.ref import abfp_matmul_ref
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+# K/N deliberately not multiples of tile or block sizes where noted.
+SHAPES = [(16, 256, 64), (8, 200, 48), (130, 500, 136)]
+
+
+def _rand(mkn, seed=0, dtype=jnp.float32):
+    m, k, n = mkn
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = (jax.random.normal(kx, (m, k)) * 0.7).astype(dtype)
+    w = (jax.random.laplace(kw, (k, n)) * 0.08).astype(dtype)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# Pack-time quantization == run-time quantization, to the bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tile", [8, 32, 128])
+@pytest.mark.parametrize("k,n", [(256, 64), (200, 48), (500, 136)])
+def test_pack_matches_runtime_quantization(tile, k, n):
+    cfg = QuantConfig(tile_width=tile, out_dtype=jnp.float32)
+    _, w = _rand((1, k, n))
+    pw = pack_abfp_weight(w, cfg)
+    w_q, s_w = quantize_weight_tiles(w, cfg)       # (T, n, N), (T, N)
+    assert pw.codes.dtype == jnp.int8
+    assert pw.scales.dtype == jnp.bfloat16
+    # N is lane-aligned at pack time; the logical columns match the
+    # run-time quantization to the bit, the padding is all-zero.
+    assert pw.n_padded % 128 == 0 and pw.n_padded >= n
+    codes = np.asarray(pw.codes, np.float32)
+    np.testing.assert_array_equal(
+        codes[:, :n].reshape(w_q.shape), np.asarray(w_q, np.float32))
+    assert not codes[:, n:].any()
+    scales = np.asarray(pw.scales, np.float32)
+    np.testing.assert_array_equal(scales[:, :n], np.asarray(s_w, np.float32))
+    assert not scales[:, n:].any()
+    # Padding metadata round-trip: logical shape survives pack/dequantize.
+    assert pw.shape == (k, n)
+    assert pw.kp % tile == 0 and pw.kp >= k
+    w_deq = dequantize_packed(pw)
+    assert w_deq.shape == (k, n)
+    lattice = (np.asarray(w_q, np.float32)
+               * quant_delta(cfg.bits_w)
+               * np.asarray(s_w, np.float32)[:, None, :]).reshape(-1, n)[:k]
+    np.testing.assert_array_equal(np.asarray(w_deq), lattice)
+
+
+def test_pack_rejects_codes_wider_than_int8():
+    cfg = QuantConfig(tile_width=32, bits_w=10)
+    _, w = _rand((1, 64, 16))
+    with pytest.raises(ValueError, match="int8"):
+        pack_abfp_weight(w, cfg)
+
+
+def test_pack_rejects_percentile_scales():
+    cfg = QuantConfig(tile_width=32, scale_percentile=99.0)
+    _, w = _rand((1, 64, 16))
+    with pytest.raises(ValueError, match="max-abs"):
+        pack_abfp_weight(w, cfg)
+
+
+def test_packed_kernel_rejects_scale_dtype_mismatch():
+    cfg = QuantConfig(tile_width=32, out_dtype=jnp.float32)
+    x, w = _rand((2, 96, 16))
+    pw = pack_abfp_weight(w, cfg)
+    with pytest.raises(ValueError, match="scale_dtype"):
+        abfp_matmul_packed_pallas(
+            x, pw, cfg.replace(scale_dtype=jnp.float32))
+
+
+def test_pack_leading_axes_and_indexing():
+    """Stacked (NG, K, N) params: pack keeps leading axes; scan/index work."""
+    cfg = QuantConfig(tile_width=32, out_dtype=jnp.float32)
+    _, w = _rand((1, 96, 40))
+    ws = jnp.stack([w, 2.0 * w, -w])
+    pws = pack_abfp_weight(ws, cfg)
+    assert pws.codes.shape[0] == 3 and pws.scales.shape[0] == 3
+    one = pack_abfp_weight(2.0 * w, cfg)
+    np.testing.assert_array_equal(np.asarray(pws[1].codes), np.asarray(one.codes))
+    np.testing.assert_array_equal(
+        np.asarray(pws[1].scales, np.float32),
+        np.asarray(one.scales, np.float32))
+    x, _ = _rand((4, 96, 40))
+    y_direct = abfp_matmul_packed_pallas(x, one, cfg)
+    _, ys = jax.lax.scan(
+        lambda c, p: (c, abfp_matmul_packed_pallas(x, p, cfg)), 0, pws)
+    np.testing.assert_array_equal(np.asarray(ys[1]), np.asarray(y_direct))
+
+
+# ---------------------------------------------------------------------------
+# Packed kernel == unpacked kernel, to the bit (incl. noise seeds)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tile", [8, 32, 128])
+@pytest.mark.parametrize("mkn", SHAPES)
+def test_packed_bit_identical_to_unpacked(tile, mkn):
+    cfg = QuantConfig(tile_width=tile, gain=4.0, noise_lsb=0.0,
+                      out_dtype=jnp.float32)
+    x, w = _rand(mkn)
+    pw = pack_abfp_weight(w, cfg)
+    y_p = abfp_matmul_packed_pallas(x, pw, cfg)
+    y_u = abfp_matmul_pallas(x, w, cfg)
+    np.testing.assert_array_equal(np.asarray(y_p), np.asarray(y_u))
+
+
+@pytest.mark.parametrize("tile", [8, 32, 128])
+def test_packed_matches_oracle(tile):
+    cfg = QuantConfig(tile_width=tile, gain=8.0, noise_lsb=0.0,
+                      out_dtype=jnp.float32)
+    for mkn in SHAPES:
+        x, w = _rand(mkn, seed=2)
+        y_p = abfp_matmul_packed_pallas(x, pack_abfp_weight(w, cfg), cfg)
+        y_r = abfp_matmul_ref(x, w, cfg)
+        np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r), **TOL)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 17])
+def test_packed_noise_bit_identical_to_unpacked(seed):
+    """Same hash PRNG, same salts: noise-on outputs match to the bit."""
+    cfg = QuantConfig(tile_width=32, gain=8.0, noise_lsb=0.5,
+                      out_dtype=jnp.float32)
+    x, w = _rand((64, 500, 96), seed=3)
+    pw = pack_abfp_weight(w, cfg)
+    s = jnp.array([seed], jnp.int32)
+    y_p = abfp_matmul_packed_pallas(x, pw, cfg, s)
+    y_u = abfp_matmul_pallas(x, w, cfg, s)
+    np.testing.assert_array_equal(np.asarray(y_p), np.asarray(y_u))
+    # distinct seeds give distinct noise
+    y_p2 = abfp_matmul_packed_pallas(x, pw, cfg, jnp.array([seed + 1], jnp.int32))
+    assert float(jnp.abs(y_p2 - y_p).max()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Decode-shape specialization
+# ---------------------------------------------------------------------------
+
+
+def test_auto_bm_decode_blocks():
+    assert auto_bm(1) == 8
+    assert auto_bm(8) == 8
+    assert auto_bm(9) == 16
+    assert auto_bm(100) == 104
+    assert auto_bm(128) == 128
+    assert auto_bm(4096) == 128
+
+
+@pytest.mark.parametrize("m", [1, 2, 8])
+def test_packed_decode_shapes(m):
+    cfg = QuantConfig(tile_width=128, gain=4.0, noise_lsb=0.0,
+                      out_dtype=jnp.float32)
+    x, w = _rand((m, 512, 256), seed=4)
+    pw = pack_abfp_weight(w, cfg)
+    y_p = abfp_matmul_packed_pallas(x, pw, cfg)       # auto bm = 8
+    y_r = abfp_matmul_ref(x, w, cfg)
+    assert y_p.shape == (m, 256)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r), **TOL)
+    # Explicit large block gives the same values (block-shape invariance).
+    y_big = abfp_matmul_packed_pallas(x, pw, cfg, bm=128)
+    np.testing.assert_allclose(np.asarray(y_big), np.asarray(y_r), **TOL)
+
+
+def test_packed_batched_input():
+    cfg = QuantConfig(tile_width=32, noise_lsb=0.0, out_dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 160))
+    w = jax.random.normal(jax.random.PRNGKey(1), (160, 48)) * 0.1
+    y_p = abfp_matmul_packed_pallas(x, pack_abfp_weight(w, cfg), cfg)
+    y_u = abfp_matmul_pallas(x, w, cfg)
+    assert y_p.shape == (2, 5, 48)
+    np.testing.assert_array_equal(np.asarray(y_p), np.asarray(y_u))
+
+
+def test_packed_rejects_mismatched_config():
+    cfg = QuantConfig(tile_width=32, out_dtype=jnp.float32)
+    _, w = _rand((1, 96, 16))
+    pw = pack_abfp_weight(w, cfg)
+    with pytest.raises(ValueError, match="does not match"):
+        abfp_matmul_packed_pallas(jnp.ones((2, 96)), pw,
+                                  cfg.replace(tile_width=8))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch + STE
+# ---------------------------------------------------------------------------
+
+
+def test_dense_abfp_packed_mode_and_ste():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 96), dtype=jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (96, 32)) * 0.1
+    cfg_k = QuantConfig(mode="abfp_kernel", tile_width=32, noise_lsb=0.0,
+                        out_dtype=jnp.float32)
+    cfg_p = cfg_k.replace(mode="abfp_packed")
+    np.testing.assert_array_equal(
+        np.asarray(dense(x, w, cfg_p)), np.asarray(dense(x, w, cfg_k)))
+    # STE (Eq. 8): pack-on-the-fly mode keeps plain-matmul gradients.
+    gx, gw = jax.grad(
+        lambda x, w: jnp.sum(dense(x, w, cfg_p).astype(jnp.float32)),
+        argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(
+        np.asarray(gx),
+        np.asarray(jnp.sum(w, axis=1)[None, :] * jnp.ones_like(x)), rtol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(gw),
+        np.asarray(jnp.sum(x, axis=0)[:, None] * jnp.ones_like(w)), rtol=1e-4)
+
+
+def test_dense_packed_prepacked_ste():
+    """Pre-packed weights: dx flows through the dequantized lattice."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 96), dtype=jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (96, 32)) * 0.1
+    cfg = QuantConfig(mode="abfp_packed", tile_width=32, noise_lsb=0.0,
+                      out_dtype=jnp.float32)
+    pw = pack_abfp_weight(w, cfg)
+    y = dense_packed(x, pw, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(abfp_matmul_packed_pallas(x, pw, cfg)))
+    gx = jax.grad(lambda x: jnp.sum(dense_packed(x, pw, cfg)))(x)
+    w_deq = dequantize_packed(pw)
+    np.testing.assert_allclose(
+        np.asarray(gx),
+        np.asarray(jnp.matmul(jnp.ones((4, 32)), w_deq.T)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model packing + packed serving tick
+# ---------------------------------------------------------------------------
+
+
+def test_pack_model_params_and_decode_bit_identical():
+    from repro.configs import smoke_config
+    from repro.core.abfp import PackedWeight
+    from repro.models import (
+        decode_step,
+        init_decode_state,
+        init_params,
+        pack_model_params,
+        packed_param_bytes,
+    )
+    from repro.models.layers import Numerics
+
+    mcfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), mcfg)
+    cfg_k = QuantConfig(mode="abfp_kernel", tile_width=32, noise_lsb=0.0)
+    cfg_p = cfg_k.replace(mode="abfp_packed")
+    packed = pack_model_params(params, cfg_p, mcfg)
+
+    leaves = jax.tree_util.tree_leaves(
+        packed, is_leaf=lambda x: isinstance(x, PackedWeight))
+    n_packed = sum(isinstance(v, PackedWeight) for v in leaves)
+    assert n_packed > 0
+    # int8 codes shrink the dense weights vs the float tree.
+    assert packed_param_bytes(packed) < packed_param_bytes(params)
+
+    token = jnp.array([3, 5], jnp.int32)
+    st_k = init_decode_state(mcfg, 2, 16)
+    st_p = init_decode_state(mcfg, 2, 16)
+    logits_k, _ = decode_step(params, st_k, token, mcfg, Numerics(cfg_k))
+    logits_p, _ = decode_step(packed, st_p, token, mcfg, Numerics(cfg_p))
+    np.testing.assert_array_equal(np.asarray(logits_k), np.asarray(logits_p))
+
+
+def test_serving_engine_packed_mode():
+    from repro.configs import smoke_config
+    from repro.core.abfp import PackedWeight
+    from repro.models import init_params
+    from repro.serving import Request, ServingEngine
+
+    mcfg = smoke_config("tinyllama-1.1b")
+    params = init_params(jax.random.PRNGKey(0), mcfg)
+    outs = {}
+    for mode in ("abfp_kernel", "abfp_packed"):
+        q = QuantConfig(mode=mode, tile_width=32, gain=4.0, noise_lsb=0.0)
+        eng = ServingEngine(params, mcfg, capacity=2, max_len=32, quant=q)
+        if mode == "abfp_packed":
+            assert any(isinstance(v, PackedWeight)
+                       for v in jax.tree_util.tree_leaves(
+                           eng.params,
+                           is_leaf=lambda x: isinstance(x, PackedWeight)))
+        reqs = [Request(uid=i, prompt=[2 + i, 7, 11], max_new_tokens=3)
+                for i in range(2)]
+        done = eng.run(reqs)
+        outs[mode] = {r.uid: r.generated for r in done}
+    assert outs["abfp_kernel"] == outs["abfp_packed"]
