@@ -4,10 +4,12 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test-fast test bench
+.PHONY: test-fast test bench bench-smoke bench-serving
 
-# Tier-1 fast lane: everything except the @pytest.mark.slow end-to-end runs.
-test-fast:
+# Tier-1 fast lane: everything except the @pytest.mark.slow end-to-end runs,
+# plus the serving smoke benchmark (asserts chunked prefill is not slower
+# than prefill-in-decode at tiny shapes).
+test-fast: bench-smoke
 	$(PY) -m pytest -q -m "not slow"
 
 # Full suite (slow: distributed dry-runs, train-driver end-to-end).
@@ -16,3 +18,12 @@ test:
 
 bench:
 	$(PY) benchmarks/run.py
+
+# Tiny-shape serving benchmark gate (float mode, prompt_len 48): fails if
+# the chunked prefill path regresses below the legacy tick-per-token path.
+bench-smoke:
+	$(PY) benchmarks/bench_serving.py --smoke
+
+# Full serving benchmark -> BENCH_serving.json (TTFT + tok/s, all modes).
+bench-serving:
+	$(PY) benchmarks/bench_serving.py

@@ -1,0 +1,158 @@
+"""Serving benchmark: time-to-first-token and throughput, prefill-in-decode
+vs chunked prefill, across numerics modes (float / abfp-kernel / abfp-packed).
+
+Chunked prefill admits prompts in bucketed multi-token chunks (one jitted
+pass per chunk, matmuls at M = capacity * chunk) instead of one decode tick
+per prompt token, so TTFT drops from O(prompt_len) sequential full-model
+passes to O(prompt_len / chunk).
+
+    PYTHONPATH=src python benchmarks/bench_serving.py          # -> BENCH_serving.json
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke  # tiny shapes; asserts
+                                                               # chunked is not slower
+
+Timing protocol: each (mode, chunked) cell builds a fresh engine, runs a
+small warmup workload that touches every jit shape the timed run needs
+(decode tick + each prefill bucket), then times one full workload: TTFT is
+wall time from first admission until EVERY request has its first token
+(requests == capacity, all admitted at once); throughput is generated
+tokens over the full run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.abfp import QuantConfig
+from repro.models import init_params, param_count
+from repro.serving import Request, ServingEngine
+
+
+def _quant(mode: str) -> QuantConfig:
+    if mode == "float":
+        return QuantConfig(mode="float")
+    jmode = {"abfp-kernel": "abfp_kernel", "abfp-packed": "abfp_packed"}[mode]
+    return QuantConfig(mode=jmode, tile_width=32, gain=8.0, noise_lsb=0.5)
+
+
+def _workload(mcfg, n, prompt_len, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(1, mcfg.vocab_size,
+                                        prompt_len).tolist(),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _run(eng, reqs):
+    """Admit everything, serve to completion.  Returns (ttft_s, total_s,
+    generated_tokens, ticks)."""
+    ticks0 = eng.ticks
+    t0 = time.perf_counter()
+    for r in reqs:
+        assert eng.try_admit(r), "workload must fit capacity"
+    ttft = None
+    while any(s is not None for s in eng.slots):
+        eng.step()
+        if ttft is None and all(r.generated for r in reqs):
+            ttft = time.perf_counter() - t0
+    total = time.perf_counter() - t0
+    return ttft, total, sum(len(r.generated) for r in reqs), eng.ticks - ticks0
+
+
+def bench_cell(params, mcfg, *, mode, chunked, capacity, prompt_len,
+               max_new, max_len, chunks, seed):
+    eng = ServingEngine(params, mcfg, capacity=capacity, max_len=max_len,
+                        quant=_quant(mode), seed=seed, chunked=chunked,
+                        prefill_chunks=chunks)
+    # Warmup compiles every shape the timed run could hit: the decode tick
+    # and (chunked only) each prefill bucket — one tiny workload per bucket
+    # at prompt_len == bucket, so no compile lands in the timed region
+    # regardless of --prompt-len.  Warm prompts are capped at max_len - 2
+    # (admission guard); the cap selects the same bucket as the largest
+    # admissible timed prompt, so every reachable bucket still gets warmed.
+    warm_lens = ({min(c, max_len - 2) for c in chunks} if chunked else {2})
+    for warm_prompt in sorted(warm_lens):
+        _run(eng, _workload(mcfg, min(2, capacity), warm_prompt, 2, seed=99))
+    ttft, total, toks, ticks = _run(
+        eng, _workload(mcfg, capacity, prompt_len, max_new, seed=seed))
+    return {"mode": mode, "chunked": chunked, "ttft_s": round(ttft, 4),
+            "total_s": round(total, 4), "tok_per_s": round(toks / total, 2),
+            "ticks": ticks}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--prompt-len", type=int, default=256)
+    ap.add_argument("--capacity", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=320)
+    ap.add_argument("--modes", default="float,abfp-kernel,abfp-packed")
+    ap.add_argument("--chunks", default="16,64,128")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_serving.json at "
+                         "the repo root; --smoke writes nothing by default)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, float only; asserts the chunked path "
+                         "is not slower than prefill-in-decode")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.prompt_len, args.capacity, args.max_new = 48, 2, 2
+        args.max_len, args.modes, args.chunks = 64, "float", "8,16"
+
+    mcfg = smoke_config(args.arch)
+    chunks = tuple(int(c) for c in args.chunks.split(","))
+    params = init_params(jax.random.PRNGKey(args.seed), mcfg)
+    print(f"[bench_serving] {args.arch} (reduced): "
+          f"{param_count(params)/1e6:.1f}M params, prompt_len="
+          f"{args.prompt_len}, capacity={args.capacity}, chunks={chunks}")
+
+    rows, speedups = [], {}
+    for mode in args.modes.split(","):
+        cell = dict(capacity=args.capacity, prompt_len=args.prompt_len,
+                    max_new=args.max_new, max_len=args.max_len,
+                    chunks=chunks, seed=args.seed)
+        base = bench_cell(params, mcfg, mode=mode, chunked=False, **cell)
+        chnk = bench_cell(params, mcfg, mode=mode, chunked=True, **cell)
+        rows += [base, chnk]
+        speedups[mode] = round(base["ttft_s"] / chnk["ttft_s"], 2)
+        print(f"  {mode:12s} ttft {base['ttft_s']:8.3f}s -> "
+              f"{chnk['ttft_s']:8.3f}s  ({speedups[mode]:5.1f}x)   "
+              f"tok/s {base['tok_per_s']:8.1f} -> {chnk['tok_per_s']:8.1f}   "
+              f"ticks {base['ticks']} -> {chnk['ticks']}")
+
+    result = {
+        "benchmark": "serving_ttft",
+        "arch": args.arch, "reduced": True,
+        "prompt_len": args.prompt_len, "capacity": args.capacity,
+        "max_new": args.max_new, "prefill_chunks": list(chunks),
+        "backend": jax.default_backend(),
+        "rows": rows, "speedup_ttft": speedups,
+    }
+    out = args.out
+    if out is None and not args.smoke:
+        out = str(Path(__file__).resolve().parent.parent
+                  / "BENCH_serving.json")
+    if out:
+        Path(out).write_text(json.dumps(result, indent=2) + "\n")
+        print(f"[bench_serving] wrote {out}")
+
+    if args.smoke:
+        assert speedups["float"] >= 1.0, (
+            f"chunked prefill slower than prefill-in-decode: "
+            f"{speedups['float']}x")
+        print(f"[bench_serving] smoke OK: chunked {speedups['float']}x "
+              f"faster TTFT")
+
+
+if __name__ == "__main__":
+    main()

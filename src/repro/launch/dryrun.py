@@ -53,8 +53,10 @@ from repro.models.lm import _pattern
 from repro.optim.optimizers import AdamW, constant
 from repro.training.train_lib import TrainConfig, TrainState, make_train_step
 
-ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                       "experiments", "dryrun")
+# Artifact output dir; REPRO_DRYRUN_ART_DIR overrides so ad-hoc runs (e.g.
+# the mini integration tests) don't pollute the real roofline artifact set.
+ART_DIR = os.environ.get("REPRO_DRYRUN_ART_DIR") or os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
 
 
 def _quant_cfg(quant: str) -> QuantConfig:

@@ -36,6 +36,13 @@ def main() -> None:
     ap.add_argument("--tile", type=int, default=128)
     ap.add_argument("--gain", type=float, default=8.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prompt-len", type=int, default=4)
+    ap.add_argument("--no-chunked", action="store_true",
+                    help="legacy prefill-in-decode: one prompt token per "
+                         "decode tick instead of bucketed prefill chunks")
+    ap.add_argument("--prefill-chunks", default="16,64,128",
+                    help="comma-separated chunk buckets for prefill passes "
+                         "(one jit compile each)")
     args = ap.parse_args()
 
     mcfg = smoke_config(args.arch) if args.reduced else get_config(args.arch)
@@ -50,10 +57,14 @@ def main() -> None:
     print(f"[serve] {args.arch}: {param_count(params)/1e6:.1f}M params, "
           f"quant={args.quant}")
     eng = ServingEngine(params, mcfg, capacity=args.capacity,
-                        max_len=args.max_len, quant=quant, seed=args.seed)
+                        max_len=args.max_len, quant=quant, seed=args.seed,
+                        chunked=not args.no_chunked,
+                        prefill_chunks=tuple(
+                            int(c) for c in args.prefill_chunks.split(",")))
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
-                    prompt=rng.integers(1, mcfg.vocab_size, 4).tolist(),
+                    prompt=rng.integers(1, mcfg.vocab_size,
+                                        args.prompt_len).tolist(),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
     t0 = time.time()

@@ -19,6 +19,7 @@ from repro.models.lm import (  # noqa: F401
     init_decode_state,
     init_params,
     param_count,
+    prefill,
 )
 from repro.models.packing import (  # noqa: F401
     pack_model_params,

@@ -260,13 +260,17 @@ def decode_attention(
     v_cache: Array,
     *,
     lengths: Array,
-    window: int = 0,
 ) -> Array:
     """One-token attention against a KV cache.
 
     q: (B, 1, H, D); caches: (B, S_max, KH, D); ``lengths``: (B,) number of
-    valid cache positions (for a ring-buffer window cache, S_max == window and
-    all filled slots are valid).
+    valid cache positions.
+
+    Ring-buffer (sliding-window) caches need no extra masking here: the
+    buffer is S_max == window wide and holds exactly the last
+    ``min(length, window)`` tokens — every filled slot is in-window by
+    construction, so validity is ``pos < lengths`` in both layouts
+    (``lengths`` is the filled-slot count, clamped to S_max by the caller).
     """
     b, _, h, d = q.shape
     s_max = k_cache.shape[1]
@@ -279,7 +283,7 @@ def decode_attention(
     s = jnp.where(valid[:, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhc,bchd->bhd", p, v)
-    return out[:, None].transpose(0, 1, 2, 3).reshape(b, 1, h, d).astype(q.dtype)
+    return out[:, None].astype(q.dtype)                     # (B, 1, H, D)
 
 
 # ---------------------------------------------------------------------------
@@ -342,6 +346,187 @@ def quantized_decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# Chunked-prefill attention: append a whole prompt chunk to the cache and
+# attend every chunk query at its own position in one pass.
+# ---------------------------------------------------------------------------
+
+
+def chunk_cache_attention(q: Array, k_cache: Array, v_cache: Array,
+                          *, q_pos: Array) -> Array:
+    """S-query attention against a (non-ring) cache buffer.
+
+    q: (B, S, H, D); caches: (B, S_max, KH, D); ``q_pos``: (B, S) global
+    position of each query — query (b, t) attends cache slots <= q_pos[b, t].
+    Mirrors ``decode_attention``'s einsum layout (scores contract head_dim,
+    PV contracts the full S_max buffer with masked p == 0) so each query row
+    is bit-identical to the decode tick that would have produced it.
+    """
+    b, s, h, d = q.shape
+    s_max = k_cache.shape[1]
+    k = _repeat_kv(k_cache, h).astype(jnp.float32)
+    v = _repeat_kv(v_cache, h).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    sc = jnp.einsum("bshd,bchd->bhsc", qf, k)               # (B, H, S, S_max)
+    mask = jnp.arange(s_max)[None, None, :] <= q_pos[:, :, None]
+    sc = jnp.where(mask[:, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhsc,bchd->bhsd", p, v)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)          # (B, S, H, D)
+
+
+def quantized_chunk_attention(
+    q: Array,
+    k_codes: Array, k_scale: Array,
+    v_codes: Array, v_scale: Array,
+    *,
+    q_pos: Array,
+) -> Array:
+    """Chunked-prefill attention directly on int8 KV codes — the S-query
+    generalization of ``quantized_decode_attention`` (same per-position
+    scale factoring, same einsum layout per query row)."""
+    b, s, h, d = q.shape
+    s_max = k_codes.shape[1]
+    kh = k_codes.shape[2]
+    rep = h // kh
+    qf = q.astype(jnp.float32) * (d ** -0.5)                 # (B, S, H, D)
+    qg = qf.reshape(b, s, kh, rep, d)
+    kc = k_codes.astype(jnp.float32)
+    sc = jnp.einsum("bsgrd,bcgd->bgrsc", qg, kc)             # (B, KH, rep, S, C)
+    sc = sc * (k_scale.astype(jnp.float32).transpose(0, 2, 1)
+               [:, :, None, None, :] / 127.0)
+    mask = (jnp.arange(s_max)[None, None, :]
+            <= q_pos[:, :, None])                            # (B, S, C)
+    sc = jnp.where(mask[:, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)                          # (B, KH, rep, S, C)
+    pv = p * (v_scale.astype(jnp.float32).transpose(0, 2, 1)
+              [:, :, None, None, :] / 127.0)
+    out = jnp.einsum("bgrsc,bcgd->bsgrd", pv, v_codes.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def _append_attend_one(q: Array, k: Array, v: Array, kv_cache: dict,
+                       window: int):
+    """Append ONE token's K/V and attend — the decode-tick attention core.
+
+    q: (B, 1, H, D); k, v: (B, 1, KH, D).  Shared by the S=1 decode path and
+    the ring-buffer chunk scan, so both run the same ops (bit-identical by
+    construction).  Returns (out (B, 1, H, D), new_cache).
+    """
+    b = q.shape[0]
+    s_max = kv_cache["k"].shape[1]
+    length = kv_cache["length"]                         # (B,)
+    slot = (length % s_max) if window > 0 else length   # ring for window
+    bidx = jnp.arange(b)
+    quantized = "k_scale" in kv_cache
+    filled = jnp.minimum(length + 1, s_max) if window > 0 else length + 1
+    if quantized:
+        # ABFP-quantized cache (beyond-paper, DESIGN.md): int8 codes +
+        # per-(token, head) max-abs scale over the head_dim vector.
+        # Attention runs directly on the codes (no dequantized copy).
+        kc, ks = _kv_encode(k[:, 0])
+        vc, vs = _kv_encode(v[:, 0])
+        k_cache = kv_cache["k"].at[bidx, slot].set(kc)
+        v_cache = kv_cache["v"].at[bidx, slot].set(vc)
+        k_scale = kv_cache["k_scale"].at[bidx, slot].set(ks)
+        v_scale = kv_cache["v_scale"].at[bidx, slot].set(vs)
+        out = quantized_decode_attention(
+            q, k_cache, k_scale, v_cache, v_scale, lengths=filled)
+        new_cache = {"k": k_cache, "v": v_cache, "length": length + 1,
+                     "k_scale": k_scale, "v_scale": v_scale}
+    else:
+        k_cache = kv_cache["k"].at[bidx, slot].set(
+            k[:, 0].astype(kv_cache["k"].dtype))
+        v_cache = kv_cache["v"].at[bidx, slot].set(
+            v[:, 0].astype(kv_cache["v"].dtype))
+        out = decode_attention(q, k_cache, v_cache, lengths=filled)
+        new_cache = {"k": k_cache, "v": v_cache, "length": length + 1}
+    return out, new_cache
+
+
+def chunk_append_attend(q: Array, k: Array, v: Array, kv_cache: dict,
+                        *, n_tokens: Array, window: int):
+    """Append up to S new K/V per slot and attend all S chunk queries — the
+    chunked-prefill attention core.
+
+    q: (B, S, H, D); k, v: (B, S, KH, D); ``n_tokens``: (B,) int32 — tokens
+    0..n-1 of slot b's chunk are real, the rest padding.  A slot with
+    n_tokens == 0 keeps its cache slice bit-for-bit unchanged (padding lanes
+    write back the values already in their slots).
+
+    Two regimes:
+      * window == 0 (append-only cache): scatter the chunk, then one batched
+        masked attention over the cache buffer, laid out exactly like
+        ``decode_attention`` — bit-identical to S decode ticks, with the
+        MXU-friendly (S queries at once) shape.
+      * window > 0 (ring buffer): scan token-by-token through the exact
+        decode core.  A mid-chunk query may need keys that LATER chunk
+        tokens evict from the ring, so post-scatter attention is wrong; the
+        scan also preserves decode's buffer layout, keeping bit-identity.
+        Only the attention core is sequential — the projections around it
+        stay batched.
+
+    Returns (out (B, S, H, D), new_cache).
+    """
+    b, s = q.shape[:2]
+    if window > 0:
+        qs = jnp.moveaxis(q, 1, 0)[:, :, None]              # (S, B, 1, H, D)
+        ks = jnp.moveaxis(k, 1, 0)[:, :, None]
+        vs = jnp.moveaxis(v, 1, 0)[:, :, None]
+        valid = jnp.arange(s)[:, None] < n_tokens[None, :]  # (S, B)
+
+        def step(cache, xs):
+            q_t, k_t, v_t, ok = xs
+            out_t, new_cache = _append_attend_one(q_t, k_t, v_t, cache, window)
+            sel = lambda new, old: jnp.where(  # noqa: E731
+                ok.reshape((b,) + (1,) * (new.ndim - 1)), new, old)
+            return jax.tree.map(sel, new_cache, cache), out_t[:, 0]
+
+        new_cache, outs = jax.lax.scan(step, kv_cache, (qs, ks, vs, valid))
+        return jnp.moveaxis(outs, 0, 1), new_cache
+
+    length = kv_cache["length"]                             # (B,)
+    s_max = kv_cache["k"].shape[1]
+    offs = jnp.arange(s)[None, :]
+    valid = offs < n_tokens[:, None]                        # (B, S)
+    # Padding lanes collapse onto the slot just past the last real token
+    # (the next position a later chunk/tick will overwrite) and write back
+    # the value already there — untouched slots stay bit-identical.  The
+    # clamp never collides with a real write as long as the caller keeps
+    # length + n_tokens < S_max (the engine reserves >= 1 decode slot).
+    idx = length[:, None] + jnp.minimum(offs, n_tokens[:, None])
+    idx = jnp.minimum(idx, s_max - 1)
+    bidx = jnp.arange(b)[:, None]
+
+    def scatter(buf, new_vals):
+        old = buf[bidx, idx]
+        sel = valid.reshape(valid.shape + (1,) * (new_vals.ndim - 2))
+        return buf.at[bidx, idx].set(
+            jnp.where(sel, new_vals.astype(buf.dtype), old))
+
+    q_pos = length[:, None] + offs                          # (B, S) global
+    quantized = "k_scale" in kv_cache
+    if quantized:
+        kc, ks = _kv_encode(k)                              # (B,S,KH,D)/(B,S,KH)
+        vc, vs = _kv_encode(v)
+        k_cache = scatter(kv_cache["k"], kc)
+        v_cache = scatter(kv_cache["v"], vc)
+        k_scale = scatter(kv_cache["k_scale"], ks)
+        v_scale = scatter(kv_cache["v_scale"], vs)
+        out = quantized_chunk_attention(
+            q, k_cache, k_scale, v_cache, v_scale, q_pos=q_pos)
+        new_cache = {"k": k_cache, "v": v_cache,
+                     "length": length + n_tokens,
+                     "k_scale": k_scale, "v_scale": v_scale}
+    else:
+        k_cache = scatter(kv_cache["k"], k)
+        v_cache = scatter(kv_cache["v"], v)
+        out = chunk_cache_attention(q, k_cache, v_cache, q_pos=q_pos)
+        new_cache = {"k": k_cache, "v": v_cache,
+                     "length": length + n_tokens}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
 # Attention block (projections through Numerics)
 # ---------------------------------------------------------------------------
 
@@ -373,6 +558,7 @@ def attention_block(
     kv_cache: Optional[dict] = None,
     cross_kv: Optional[tuple] = None,
     train_mode: bool = False,
+    n_tokens: Optional[Array] = None,
 ):
     """Self- (or cross-) attention with optional KV cache for decode.
 
@@ -380,6 +566,11 @@ def attention_block(
     "v": ..., "length": (B,)} — ring buffer when window > 0.
     ``train_mode`` selects the q-chunked remat attention (backward-memory
     bounded); inference uses the kv-chunked online-softmax path.
+
+    With a cache and S > 1 (or ``n_tokens`` given) this is the chunked
+    prefill path: x holds a prompt chunk, ``n_tokens`` (B,) marks how many
+    of its S tokens are real per slot (None == all S), and the whole chunk
+    is appended + attended in one pass (``chunk_append_attend``).
     """
     b, s, _ = x.shape
     h, kh, hd = mcfg.num_heads, mcfg.num_kv_heads, mcfg.resolved_head_dim
@@ -396,35 +587,15 @@ def attention_block(
 
     new_cache = None
     if kv_cache is not None and cross_kv is None:
-        # Decode: append this step's K/V, attend over the filled cache.
-        s_max = kv_cache["k"].shape[1]
-        length = kv_cache["length"]                         # (B,)
-        slot = (length % s_max) if window > 0 else length   # ring for window
-        bidx = jnp.arange(b)
-        quantized = "k_scale" in kv_cache
-        filled = jnp.minimum(length + 1, s_max) if window > 0 else length + 1
-        if quantized:
-            # ABFP-quantized cache (beyond-paper, DESIGN.md): int8 codes +
-            # per-(token, head) max-abs scale over the head_dim vector.
-            # Attention runs directly on the codes (no dequantized copy).
-            kc, ks = _kv_encode(k[:, 0])
-            vc, vs = _kv_encode(v[:, 0])
-            k_cache = kv_cache["k"].at[bidx, slot].set(kc)
-            v_cache = kv_cache["v"].at[bidx, slot].set(vc)
-            k_scale = kv_cache["k_scale"].at[bidx, slot].set(ks)
-            v_scale = kv_cache["v_scale"].at[bidx, slot].set(vs)
-            out = quantized_decode_attention(
-                q, k_cache, k_scale, v_cache, v_scale, lengths=filled)
-            new_cache = {"k": k_cache, "v": v_cache, "length": length + 1,
-                         "k_scale": k_scale, "v_scale": v_scale}
+        if s == 1 and n_tokens is None:
+            # Decode: append this step's K/V, attend over the filled cache.
+            out, new_cache = _append_attend_one(q, k, v, kv_cache, window)
         else:
-            k_cache = kv_cache["k"].at[bidx, slot].set(
-                k[:, 0].astype(kv_cache["k"].dtype))
-            v_cache = kv_cache["v"].at[bidx, slot].set(
-                v[:, 0].astype(kv_cache["v"].dtype))
-            out = decode_attention(q, k_cache, v_cache, lengths=filled,
-                                   window=window)
-            new_cache = {"k": k_cache, "v": v_cache, "length": length + 1}
+            # Chunked prefill: append + attend a whole prompt chunk.
+            n = (n_tokens if n_tokens is not None
+                 else jnp.full((b,), s, jnp.int32))
+            out, new_cache = chunk_append_attend(
+                q, k, v, kv_cache, n_tokens=n, window=window)
     elif cross_kv is not None:
         if train_mode:
             out = train_attention(q, k, v, causal=False,

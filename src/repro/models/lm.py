@@ -7,9 +7,14 @@ scanned block).  Remainder layers (pattern not dividing num_layers) are
 applied unrolled.
 
 Forward modes:
-  * ``forward``       — teacher-forced logits for train / prefill.
+  * ``forward``       — teacher-forced logits for train / full-sequence eval.
   * ``decode_step``   — one token with carried per-layer state (KV cache,
     ring-buffer window cache, or recurrent state), O(1) per token.
+  * ``prefill``       — a whole prompt CHUNK with carried state in one pass
+    (serving admission): same state semantics as ``decode_step`` but S =
+    chunk, with a per-slot valid-token count so prefilling and decoding
+    slots coexist in a batch.  Bit-identical to S decode steps in float
+    mode.
   * ``forward_capture`` — unrolled paired FLOAT/ABFP pass returning per-layer
     differential-noise samples for DNF (paper Fig. 3).
 """
@@ -146,8 +151,14 @@ def _apply_layer(
     state: Optional[dict] = None,
     enc_kv: Optional[tuple] = None,
     mesh=None,
+    n_tokens: Optional[Array] = None,
 ):
-    """One layer (pre-norm residual).  Returns (x, new_state, aux_loss)."""
+    """One layer (pre-norm residual).  Returns (x, new_state, aux_loss).
+
+    ``n_tokens`` (B,) marks the chunked-prefill path: x holds a prompt
+    chunk of which only the first n_tokens[b] positions are real per slot;
+    state updates for the padding (and for slots with n == 0) are no-ops.
+    """
     aux = jnp.float32(0.0)
     new_state: Any = None
     if kind == "attention":
@@ -156,7 +167,7 @@ def _apply_layer(
         attn_out, kv = attention_block(
             lp["attn"], h, mcfg, nx, positions=positions,
             window=window, kv_cache=(state or {}).get("kv"),
-            train_mode=mcfg.remat)
+            train_mode=mcfg.remat, n_tokens=n_tokens)
         x = x + attn_out
         new_state = {"kv": kv} if kv is not None else None
         if enc_kv is not None:
@@ -179,7 +190,8 @@ def _apply_layer(
     elif kind == "recurrent":
         h = norm(x, lp["norm1"], mcfg.norm_type)
         y, st = rec_lib.rglru_block(lp["rglru"], h, mcfg, nx,
-                                    state=(state or {}).get("rec"))
+                                    state=(state or {}).get("rec"),
+                                    n_tokens=n_tokens)
         x = x + y
         new_state = {"rec": st}
         h = norm(x, lp["norm2"], mcfg.norm_type)
@@ -187,13 +199,15 @@ def _apply_layer(
     elif kind == "mlstm":
         h = norm(x, lp["norm1"], mcfg.norm_type)
         y, st = rec_lib.mlstm_block(lp["mlstm"], h, mcfg, nx,
-                                    state=(state or {}).get("rec"))
+                                    state=(state or {}).get("rec"),
+                                    n_tokens=n_tokens)
         x = x + y
         new_state = {"rec": st}
     elif kind == "slstm":
         h = norm(x, lp["norm1"], mcfg.norm_type)
         y, st = rec_lib.slstm_block(lp["slstm"], h, mcfg, nx,
-                                    state=(state or {}).get("rec"))
+                                    state=(state or {}).get("rec"),
+                                    n_tokens=n_tokens)
         x = x + y
         new_state = {"rec": st}
     else:
@@ -472,6 +486,87 @@ def decode_step(
         "groups": new_group_states,
         "extra": tuple(new_extra),
         "position": state["position"] + 1,
+    }
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (S = chunk generalization of decode_step)
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    params: dict,
+    state: dict,
+    tokens: Array,
+    n_tokens: Array,
+    mcfg: ModelConfig,
+    nx: Optional[Numerics] = None,
+    *,
+    enc_kv=None,
+):
+    """Advance slots by a whole prompt chunk in ONE jitted pass.
+
+    tokens: (B, S) int32 prompt chunk per slot (padding values arbitrary);
+    ``n_tokens``: (B,) int32 — tokens[b, :n_tokens[b]] are real.  A slot
+    with n_tokens == 0 is left bit-for-bit untouched, so prefilling and
+    decoding slots can share the batch.  Returns (logits (B, V) f32 taken
+    at each slot's LAST valid token, new_state).
+
+    Prompt admission cost drops from O(prompt_len) sequential decode ticks
+    to O(prompt_len / chunk) passes whose matmuls run at M = B*S — the
+    MXU-friendly shapes the packed ABFP kernel was built for.
+
+    Numerics: in ``mode="float"`` the result is bit-identical to feeding
+    the same tokens through ``decode_step`` one at a time (the projections
+    batch over the chunk, while order-sensitive state updates — KV append,
+    ring-buffer window attention, recurrent folds — run as scans of the
+    exact decode-step ops; see tests/test_prefill.py).  ABFP modes are
+    statistically equivalent only: the Pallas noise PRNG salts by grid
+    position, and a chunked matmul grid differs from S decode-shaped grids.
+    """
+    nx = nx or Numerics(QuantConfig(mode="float"))
+    b, s = tokens.shape[:2]
+    positions = state["position"][:, None] + jnp.arange(s)[None, :]
+    x = _embed(params, tokens, mcfg, positions)
+
+    pattern, n_groups, remainder = _pattern(mcfg)
+    glen = len(pattern)
+
+    def body(x, xs):
+        gparams, gstate, g_enc_kv, g = xs
+        new_states = []
+        for j, kind in enumerate(pattern):
+            nxj = nx.fold(g * glen + j)
+            ek = g_enc_kv[j] if g_enc_kv is not None else None
+            x, st, _ = _apply_layer(
+                gparams[j], x, mcfg, kind, nxj,
+                positions=positions, state=gstate[j], enc_kv=ek,
+                n_tokens=n_tokens)
+            new_states.append(st)
+        return x, tuple(new_states)
+
+    x, new_group_states = jax.lax.scan(
+        body, x,
+        (params["groups"], state["groups"], enc_kv, jnp.arange(n_groups)))
+
+    new_extra = []
+    for r in range(remainder):
+        kind = pattern[r]
+        x, st, _ = _apply_layer(
+            params["extra"][r], x, mcfg, kind, nx.fold(n_groups * glen + r),
+            positions=positions, state=state["extra"][r], enc_kv=None,
+            n_tokens=n_tokens)
+        new_extra.append(st)
+
+    x = norm(x, params["final_norm"], mcfg.norm_type)
+    last = jnp.clip(n_tokens - 1, 0, s - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # (B, 1, d)
+    logits = _lm_head(params, x_last, mcfg, nx.fold(999_983))[:, 0]
+    new_state = {
+        "groups": new_group_states,
+        "extra": tuple(new_extra),
+        "position": state["position"] + n_tokens,
     }
     return logits, new_state
 

@@ -56,9 +56,15 @@ def init_rglru_block(key, mcfg, layer_shape=()) -> dict:
     }
 
 
-def _causal_depthwise_conv(u: Array, w: Array, state: Optional[Array]):
+def _causal_depthwise_conv(u: Array, w: Array, state: Optional[Array],
+                           n_tokens: Optional[Array] = None):
     """u: (B, S, R), w: (W, R) depthwise causal conv.  ``state``: last W-1
-    inputs from the previous call (decode).  Returns (out, new_state)."""
+    inputs from the previous call (decode).  Returns (out, new_state).
+
+    ``n_tokens`` (chunked prefill): only the first n_tokens[b] positions of
+    u are real; the carried tail is then the last W-1 inputs of the VALID
+    prefix (per-slot gather), so a slot with n == 0 keeps its state exactly.
+    """
     width = w.shape[0]
     if state is None:
         state = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
@@ -66,19 +72,34 @@ def _causal_depthwise_conv(u: Array, w: Array, state: Optional[Array]):
     out = sum(
         ext[:, i : i + u.shape[1]] * w[i][None, None] for i in range(width)
     )
-    new_state = ext[:, -(width - 1):] if width > 1 else state
+    if width == 1:
+        new_state = state
+    elif n_tokens is None:
+        new_state = ext[:, -(width - 1):]
+    else:
+        idx = n_tokens[:, None] + jnp.arange(width - 1)[None, :]  # (B, W-1)
+        new_state = jnp.take_along_axis(ext, idx[:, :, None], axis=1)
     return out, new_state
 
 
 def rglru_block(params, x: Array, mcfg, nx: Numerics,
-                state: Optional[dict] = None):
+                state: Optional[dict] = None,
+                n_tokens: Optional[Array] = None):
     """Griffin recurrent block.  Returns (y, new_state); state carries the
-    conv tail and the LRU hidden h — O(1) memory per token (long-context)."""
+    conv tail and the LRU hidden h — O(1) memory per token (long-context).
+
+    ``n_tokens`` (B,) selects the chunked-prefill path: the projections run
+    batched over the chunk while the h recurrence folds SEQUENTIALLY (same
+    per-step op as decode, so the carried state is bit-identical to feeding
+    the chunk token by token); positions >= n_tokens[b] leave slot b's
+    state untouched.
+    """
     gate = jax.nn.gelu(nx.dense(x, params["w_gate"]).astype(jnp.float32))
     u = nx.dense(x, params["w_in"])
 
     conv_state = state["conv"] if state else None
-    u, new_conv = _causal_depthwise_conv(u, params["conv_w"], conv_state)
+    u, new_conv = _causal_depthwise_conv(u, params["conv_w"], conv_state,
+                                         n_tokens=n_tokens)
 
     uf = u.astype(jnp.float32)
     r = jax.nn.sigmoid(nx.dense(u, params["w_rg"]).astype(jnp.float32))
@@ -88,7 +109,20 @@ def rglru_block(params, x: Array, mcfg, nx: Numerics,
     b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
 
     h0 = state["h"] if state else None
-    if x.shape[1] == 1 and h0 is not None:
+    if n_tokens is not None:
+        assert h0 is not None, "chunked prefill needs a carried state"
+        valid = jnp.arange(x.shape[1])[:, None] < n_tokens[None, :]  # (S, B)
+
+        def stepf(h, xs):
+            a_t, b_t, ok = xs
+            h = jnp.where(ok[:, None], a_t * h + b_t, h)      # decode-step op
+            return h, h
+
+        h, hs = jax.lax.scan(
+            stepf, h0,
+            (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0), valid))
+        hs = jnp.moveaxis(hs, 0, 1)
+    elif x.shape[1] == 1 and h0 is not None:
         h = a[:, 0] * h0 + b[:, 0]                            # decode step
         hs = h[:, None]
     else:
@@ -131,10 +165,16 @@ def init_mlstm_block(key, mcfg, layer_shape=()) -> dict:
     }
 
 
-def _mlstm_chunk_scan(q, k, v, log_i, log_f, state, chunk):
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, state, chunk, valid=None):
     """Chunkwise stabilized mLSTM.  q,k,v: (B, NH, S, D); gates (B, NH, S).
-    state: (C (B,NH,D,D), n (B,NH,D), m (B,NH)).  Returns (h, new_state)."""
+    state: (C (B,NH,D,D), n (B,NH,D), m (B,NH)).  Returns (h, new_state).
+
+    ``valid`` (B, S) bool requires chunk == 1 (each scan step is then one
+    token): steps with valid False leave the carried state unchanged —
+    the chunked-prefill padding semantics.
+    """
     b, nh, s, dh = q.shape
+    assert valid is None or chunk == 1, "valid mask needs chunk == 1"
     pad = (-s) % chunk
     if pad:
         padf = lambda a, fill=0.0: jnp.pad(  # noqa: E731
@@ -146,6 +186,10 @@ def _mlstm_chunk_scan(q, k, v, log_i, log_f, state, chunk):
         log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
     sp = s + pad
     nc = sp // chunk
+    if valid is None:
+        cvalid = jnp.ones((nc, b), bool)
+    else:
+        cvalid = jnp.moveaxis(valid.reshape(b, nc, chunk)[..., 0], 1, 0)
     # (NC, B, NH, c, D) chunked views.
     cq = jnp.moveaxis(q.reshape(b, nh, nc, chunk, dh), 2, 0)
     ck = jnp.moveaxis(k.reshape(b, nh, nc, chunk, dh), 2, 0)
@@ -155,7 +199,7 @@ def _mlstm_chunk_scan(q, k, v, log_i, log_f, state, chunk):
 
     def step(carry, xs):
         cmat, n, m = carry                         # (B,NH,D,D),(B,NH,D),(B,NH)
-        qc, kc, vc, li, lf = xs
+        qc, kc, vc, li, lf, ok = xs
         csum = jnp.cumsum(lf, axis=-1)             # (B, NH, c)
         total = csum[..., -1]
         # Decay from chunk start to position t (inclusive of f_t).
@@ -187,16 +231,25 @@ def _mlstm_chunk_scan(q, k, v, log_i, log_f, state, chunk):
             "bhs,bhsd,bhse->bhde", k_w, kc * (dh ** -0.5), vc)
         n_new = n * decay_state[..., None] + jnp.einsum(
             "bhs,bhsd->bhd", k_w, kc * (dh ** -0.5))
-        return (cmat_new, n_new, m_end), h
+        sel = lambda new, old: jnp.where(  # noqa: E731
+            ok.reshape((b,) + (1,) * (new.ndim - 1)), new, old)
+        return (sel(cmat_new, cmat), sel(n_new, n), sel(m_end, m)), h
 
-    new_state, hs = jax.lax.scan(step, state, (cq, ck, cv, cli, clf))
+    new_state, hs = jax.lax.scan(step, state, (cq, ck, cv, cli, clf, cvalid))
     h = jnp.moveaxis(hs, 0, 2).reshape(b, nh, sp, dh)[:, :, :s]
     return h, new_state
 
 
 def mlstm_block(params, x: Array, mcfg, nx: Numerics,
-                state: Optional[dict] = None, chunk: int = 128):
-    """xLSTM mLSTM block.  Returns (y, new_state)."""
+                state: Optional[dict] = None, chunk: int = 128,
+                n_tokens: Optional[Array] = None):
+    """xLSTM mLSTM block.  Returns (y, new_state).
+
+    ``n_tokens`` (B,) selects the chunked-prefill path: projections batched
+    over the chunk, state update run at chunk=1 (one token per scan step —
+    the same arithmetic as a decode tick, so the carried state is
+    bit-identical to token-by-token), padding positions masked out.
+    """
     b, s, d = x.shape
     nh = mcfg.num_heads
     up = nx.dense(x, params["w_up"])
@@ -218,9 +271,13 @@ def mlstm_block(params, x: Array, mcfg, nx: Numerics,
             "m": jnp.zeros((b, nh), jnp.float32),
         }
     qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    if n_tokens is not None:
+        chunk_eff, valid = 1, jnp.arange(s)[None, :] < n_tokens[:, None]
+    else:
+        chunk_eff, valid = min(chunk, max(s, 1)), None
     h, (c_new, n_new, m_new) = _mlstm_chunk_scan(
         qf, kf, vf, log_i, log_f,
-        (state["C"], state["n"], state["m"]), min(chunk, max(s, 1)))
+        (state["C"], state["n"], state["m"]), chunk_eff, valid)
     h = h.transpose(0, 2, 1, 3).reshape(b, s, inner)
     h = h + params["skip_scale"][None, None].astype(jnp.float32) * up.astype(jnp.float32)
     y = nx.dense((h * gate).astype(x.dtype), params["w_down"])
@@ -255,9 +312,15 @@ def init_slstm_block(key, mcfg, layer_shape=()) -> dict:
 
 
 def slstm_block(params, x: Array, mcfg, nx: Numerics,
-                state: Optional[dict] = None):
+                state: Optional[dict] = None,
+                n_tokens: Optional[Array] = None):
     """xLSTM sLSTM block with exp input gate and stabilizer state.
-    Sequential over time (recurrent gate weights).  Returns (y, new_state)."""
+    Sequential over time (recurrent gate weights).  Returns (y, new_state).
+
+    ``n_tokens`` (B,): chunked-prefill padding mask — steps at or past
+    n_tokens[b] leave slot b's state unchanged (the scan is already the
+    decode-step fold, so chunked state == token-by-token state bitwise).
+    """
     b, s, d = x.shape
     nh = mcfg.num_heads
     dh = d // nh
@@ -272,7 +335,8 @@ def slstm_block(params, x: Array, mcfg, nx: Numerics,
                  "n": jnp.zeros((b, nh, dh), jnp.float32),
                  "m": jnp.full((b, nh, dh), -1e30, jnp.float32)}
 
-    def step(carry, gx_t):
+    def step(carry, xs):
+        gx_t, ok = xs
         h, c, n, m = carry                                   # (B, NH, dh)
         rec = jnp.einsum("bhd,hde->bhe", h, r_h)             # (B, NH, 4dh)
         g = gx_t.reshape(b, nh, 4 * dh) + rec
@@ -286,11 +350,16 @@ def slstm_block(params, x: Array, mcfg, nx: Numerics,
         c_new = f * c + i * z
         n_new = f * n + i
         h_new = o * c_new / jnp.maximum(n_new, 1.0)
-        return (h_new, c_new, n_new, m_new), h_new
+        sel = lambda new, old: jnp.where(ok[:, None, None], new, old)  # noqa: E731
+        return (sel(h_new, h), sel(c_new, c), sel(n_new, n),
+                sel(m_new, m)), h_new
 
     gx_t = jnp.moveaxis(gx, 1, 0)                            # (S, B, 4d)
+    valid = (jnp.arange(s)[:, None] < n_tokens[None, :]
+             if n_tokens is not None else jnp.ones((s, b), bool))
     (h, c, n, m), hs = jax.lax.scan(
-        step, (state["h"], state["c"], state["n"], state["m"]), gx_t)
+        step, (state["h"], state["c"], state["n"], state["m"]),
+        (gx_t, valid))
     hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
 
     up = nx.dense(hs, params["w_up"])

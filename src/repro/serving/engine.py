@@ -1,25 +1,52 @@
-"""Batched serving engine: continuous batching at token granularity.
+"""Batched serving engine: continuous batching with chunked prefill.
 
-Every tick advances ALL live slots by one token.  A slot still consuming its
-prompt feeds the next prompt token (chunkless "prefill-in-decode"); a slot
-past its prompt feeds its last sampled token and records the new one.  Slots
-join/leave without recompilation — occupancy is data, not shape — and a
-joining request resets its slot's state slice (position, KV validity via
-length, recurrent states).
+Tick model
+----------
+The engine owns one batched decode state of ``capacity`` slots.  Every call
+to ``step()`` advances the batch by ONE jitted pass, which is either:
 
-Numerics are pluggable: ``QuantConfig(mode="abfp_ref")`` serves the model
-exactly as the AMS device would compute it (the paper's deployment target),
+  * a **decode tick** (``decode_step``) — every live slot advances by one
+    token at the decode-specialized matmul shapes (M = capacity), or
+  * a **prefill pass** (``models.prefill``) — taken whenever any live slot
+    still has unconsumed prompt.  Each prefilling slot contributes its next
+    prompt chunk (up to the largest configured bucket) and each DECODING
+    slot rides along with its single next token, so admission never stalls
+    generation: a prefilling slot and a decoding slot coexist in one batch
+    via per-slot position/length tracking (``n_tokens``).
+
+Chunked prefill turns prompt admission from O(prompt_len) sequential
+full-model ticks into O(prompt_len / chunk) passes whose matmuls run at
+M = capacity * chunk — the MXU-friendly shapes the packed ABFP kernel is
+2–5x faster per byte at (see BENCH_serving.json for the measured
+time-to-first-token win; ``chunked=False`` restores the legacy
+prefill-in-decode behavior for comparison).
+
+Bucketing policy
+----------------
+Chunk lengths are drawn from the small static set ``prefill_chunks`` (the
+pass is padded up to the smallest bucket that fits, per-slot padding is
+masked via ``n_tokens``), so jit compiles at most ``len(prefill_chunks)``
+prefill shapes — occupancy, chunk fill, and slot membership are all data,
+not shape.
+
+Numerics
+--------
+Pluggable via ``QuantConfig``: ``mode="abfp_ref"`` serves the model exactly
+as the AMS device would compute it (the paper's deployment target),
 ``mode="float"`` is the FLOAT32 reference.  ``mode="abfp_packed"`` is the
 production path: all dense weights are quantized ONCE at engine init
-(int8 tile codes + bf16 scales, ``models.packing``) and every tick runs the
-packed Pallas kernel — no per-token weight re-quantization, half the
-weight HBM traffic, and decode-shaped (small-row-block) matmul grids.
+(int8 tile codes + bf16 scales, ``models.packing``) and every pass runs the
+packed Pallas kernel — no per-token weight re-quantization, half the weight
+HBM traffic.  Float-mode chunked prefill is bit-identical to the token-by-
+token path; ABFP modes are statistically equivalent only (the kernel's
+noise PRNG salts by grid position, and chunked grids differ from
+decode-shaped grids — same noise distribution, different draws).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +54,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.abfp import QuantConfig
-from repro.models import decode_step, init_decode_state
+from repro.models import decode_step, init_decode_state, prefill
 from repro.models.layers import Numerics
 
 
@@ -38,7 +65,7 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     generated: List[int] = dataclasses.field(default_factory=list)
-    prompt_pos: int = 0
+    prompt_pos: int = 0                 # prompt tokens consumed so far
     done: bool = False
 
 
@@ -46,7 +73,9 @@ class ServingEngine:
     def __init__(self, params, mcfg: ModelConfig, *, capacity: int = 8,
                  max_len: int = 512,
                  quant: QuantConfig = QuantConfig(mode="float"),
-                 seed: int = 0):
+                 seed: int = 0,
+                 prefill_chunks: Sequence[int] = (16, 64, 128),
+                 chunked: bool = True):
         if quant.mode == "abfp_packed":
             # Quantize-once: pack every dense weight at admission time so
             # the per-tick decode path only streams int8 codes + bf16
@@ -63,6 +92,8 @@ class ServingEngine:
         self.slots: List[Optional[Request]] = [None] * capacity
         self._next_input = np.zeros((capacity,), np.int32)
         self.ticks = 0
+        self.prefill_chunks = tuple(sorted({int(c) for c in prefill_chunks}))
+        self.chunked = chunked and bool(self.prefill_chunks)
 
         def _step(params, state, token, key):
             nx = Numerics(quant, key)
@@ -70,35 +101,143 @@ class ServingEngine:
 
         self._jit_step = jax.jit(_step, donate_argnums=(1,))
 
+        def _prefill(params, state, tokens, n_tokens, key):
+            nx = Numerics(quant, key)
+            return prefill(params, state, tokens, n_tokens, mcfg, nx)
+
+        # One compile per chunk bucket (shape-specialized), nothing more.
+        self._jit_prefill = jax.jit(_prefill, donate_argnums=(1,))
+
+        def _reset(state, i):
+            def reset(path, leaf):
+                names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                         for k in path]
+                b_axis = 1 if "groups" in names else 0
+                if leaf.ndim <= b_axis:
+                    return leaf
+                idx = (slice(None),) * b_axis + (i,)
+                fill = (-1e30 if names[-1] == "m" and leaf.ndim - b_axis == 3
+                        else 0)
+                return leaf.at[idx].set(jnp.asarray(fill, leaf.dtype))
+
+            return jax.tree_util.tree_map_with_path(reset, state)
+
+        # Compile-once slot reset: the slot index is data, so admission
+        # under churn costs one fused scatter pass instead of a host-side
+        # state rebuild that scales with model size.
+        self._jit_reset = jax.jit(_reset, donate_argnums=(0,))
+
     # -- slot state reset -----------------------------------------------------
     def _reset_slot(self, i: int):
-        def reset(path, leaf):
-            names = [str(getattr(k, "key", getattr(k, "idx", k)))
-                     for k in path]
-            b_axis = 1 if "groups" in names else 0
-            if leaf.ndim <= b_axis:
-                return leaf
-            idx = (slice(None),) * b_axis + (i,)
-            fill = -1e30 if names[-1] == "m" and leaf.ndim - b_axis == 3 else 0
-            return leaf.at[idx].set(fill)
-
-        self.state = jax.tree_util.tree_map_with_path(reset, self.state)
+        self.state = self._jit_reset(self.state, jnp.int32(i))
 
     # -- admission ------------------------------------------------------------
+    def fits(self, req: Request) -> bool:
+        """A request needs a non-empty prompt (there is no token to condition
+        the first generation on otherwise) and must leave room for at least
+        one generated token — the chunk scatter parks padding lanes on the
+        next unwritten cache slot, which only exists while
+        length + n_tokens < max_len."""
+        return (len(req.prompt) >= 1
+                and len(req.prompt) + max(1, req.max_new_tokens)
+                <= self.max_len)
+
     def try_admit(self, req: Request) -> bool:
+        if not self.fits(req):
+            raise ValueError(
+                f"request {req.uid}: prompt ({len(req.prompt)}) must be "
+                f"non-empty and prompt + max_new ({req.max_new_tokens}) "
+                f"must fit max_len ({self.max_len})")
         for i, slot in enumerate(self.slots):
             if slot is None:
                 self._reset_slot(i)
                 self.slots[i] = req
-                self._next_input[i] = req.prompt[0]
-                req.prompt_pos = 1
+                if self.chunked:
+                    req.prompt_pos = 0      # consumed by prefill passes
+                else:
+                    # Legacy prefill-in-decode: one prompt token per tick.
+                    self._next_input[i] = req.prompt[0]
+                    req.prompt_pos = 1
                 return True
         return False
 
-    # -- one engine tick --------------------------------------------------------
+    # -- sampling -------------------------------------------------------------
+    def _record(self, i: int, req: Request, logits_row: np.ndarray):
+        if req.temperature > 0:
+            z = logits_row / req.temperature
+            z -= z.max()
+            p = np.exp(z)
+            p /= p.sum()
+            nxt = int(np.random.default_rng(req.uid * 7919 + len(req.generated))
+                      .choice(len(p), p=p))
+        else:
+            nxt = int(np.argmax(logits_row))
+        req.generated.append(nxt)
+        self._next_input[i] = nxt
+        if len(req.generated) >= req.max_new_tokens:
+            req.done = True
+            self.slots[i] = None            # free for the next request
+
+    # -- one engine tick ------------------------------------------------------
     def step(self):
-        if not any(s is not None for s in self.slots):
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if not live:
             return
+        prefilling = [i for i in live
+                      if self.slots[i].prompt_pos < len(self.slots[i].prompt)]
+        if self.chunked and prefilling:
+            if all(len(self.slots[i].prompt) - self.slots[i].prompt_pos == 1
+                   for i in prefilling):
+                # Every prefilling slot has exactly ONE prompt token left:
+                # the decode tick already has the right shape, so feed that
+                # token as the decode input instead of paying a padded
+                # smallest-bucket chunk pass.
+                for i in prefilling:
+                    req = self.slots[i]
+                    self._next_input[i] = req.prompt[req.prompt_pos]
+                    req.prompt_pos += 1
+                self._decode_tick()
+            else:
+                self._prefill_pass(live)
+        else:
+            self._decode_tick()
+
+    def _prefill_pass(self, live: List[int]):
+        """One bucketed prefill pass: prompt chunks for prefilling slots,
+        a single next token for decoding slots, no-op for empty slots."""
+        need = np.zeros((self.capacity,), np.int32)
+        for i in live:
+            req = self.slots[i]
+            rem = len(req.prompt) - req.prompt_pos
+            need[i] = min(rem, self.prefill_chunks[-1]) if rem > 0 else 1
+        bucket = next(c for c in self.prefill_chunks if c >= need.max())
+
+        tokens = np.zeros((self.capacity, bucket), np.int32)
+        for i in live:
+            req = self.slots[i]
+            if req.prompt_pos < len(req.prompt):
+                n = int(need[i])
+                tokens[i, :n] = req.prompt[req.prompt_pos:req.prompt_pos + n]
+            else:
+                tokens[i, 0] = self._next_input[i]
+        self.key, sub = jax.random.split(self.key)
+        logits, self.state = self._jit_prefill(
+            self.params, self.state, jnp.asarray(tokens),
+            jnp.asarray(need), sub)
+        logits = np.asarray(logits, np.float32)
+        self.ticks += 1
+
+        for i in live:
+            req = self.slots[i]
+            if req.prompt_pos < len(req.prompt):
+                req.prompt_pos += int(need[i])
+                if req.prompt_pos < len(req.prompt):
+                    continue                # still prefilling; logits unused
+            # Prompt just completed (logits are at its last prompt token) or
+            # the slot was decoding: sample the next token either way.
+            self._record(i, req, logits[i])
+
+    def _decode_tick(self):
         token = jnp.asarray(self._next_input)
         self.key, sub = jax.random.split(self.key)
         logits, self.state = self._jit_step(self.params, self.state, token, sub)
@@ -109,30 +248,25 @@ class ServingEngine:
             if req is None:
                 continue
             if req.prompt_pos < len(req.prompt):
-                # still prefilling: feed the next prompt token, ignore logits
+                # legacy prefill-in-decode: feed the next prompt token
                 self._next_input[i] = req.prompt[req.prompt_pos]
                 req.prompt_pos += 1
                 continue
-            if req.temperature > 0:
-                z = logits[i] / req.temperature
-                z -= z.max()
-                p = np.exp(z)
-                p /= p.sum()
-                nxt = int(np.random.default_rng(req.uid * 7919 + len(req.generated))
-                          .choice(len(p), p=p))
-            else:
-                nxt = int(np.argmax(logits[i]))
-            req.generated.append(nxt)
-            self._next_input[i] = nxt
-            if len(req.generated) >= req.max_new_tokens:
-                req.done = True
-                self.slots[i] = None            # free for the next request
+            self._record(i, req, logits[i])
 
     def run(self, requests: List[Request]) -> List[Request]:
-        """Serve a workload to completion (FCFS admission)."""
-        pending = list(requests)
-        inflight: List[Request] = []
+        """Serve a workload to completion (FCFS admission).  Oversized
+        requests are rejected up front (marked done, nothing generated)
+        rather than crashing the serve loop mid-flight."""
+        pending = []
         finished: List[Request] = []
+        for r in requests:
+            if self.fits(r):
+                pending.append(r)
+            else:
+                r.done = True
+                finished.append(r)
+        inflight: List[Request] = []
         while pending or inflight:
             while pending and self.try_admit(pending[0]):
                 inflight.append(pending.pop(0))
