@@ -1,10 +1,29 @@
 # Developer entry points.  The repo is import-run via PYTHONPATH=src (no
 # install step); every target bakes that in so CI/tier-1 is one invocation.
+#
+# Test lanes (mirrored by .github/workflows/ci.yml):
+#   test-fast  — tier-1 gate: the bench-smoke serving regression check, then
+#                every test OUTSIDE the @pytest.mark.slow marker.  This is
+#                the required CI job.
+#   test-slow  — ONLY the @slow suite (distributed dry-runs, train-driver
+#                end-to-end); runs as a separate non-blocking CI job.
+#   test       — the full suite (fast + slow) in one pytest invocation.
+#   lint       — ruff over src/ (config in pyproject.toml: E/F/W + import
+#                order, line length 88).  Skips with a notice when ruff is
+#                not installed locally; CI always installs it
+#                (requirements-ci.txt) so the gate is real there.
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test-fast test bench bench-smoke bench-serving
+.PHONY: lint test-fast test test-slow bench bench-smoke bench-serving
+
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src; \
+	else \
+		echo "[lint] ruff not installed; skipping (CI installs it via requirements-ci.txt)"; \
+	fi
 
 # Tier-1 fast lane: everything except the @pytest.mark.slow end-to-end runs,
 # plus the serving smoke benchmark (asserts chunked prefill is not slower
@@ -16,14 +35,21 @@ test-fast: bench-smoke
 test:
 	$(PY) -m pytest -q
 
+# Only the @slow marker suite (the non-blocking CI job).
+test-slow:
+	$(PY) -m pytest -q -m slow
+
 bench:
 	$(PY) benchmarks/run.py
 
 # Tiny-shape serving benchmark gate (float mode, prompt_len 48): fails if
 # the chunked prefill path regresses below the legacy tick-per-token path.
+# Writes a machine-readable verdict (pass/fail + measured ratio) to
+# BENCH_serving_smoke.json, which CI uploads as an artifact.
 bench-smoke:
 	$(PY) benchmarks/bench_serving.py --smoke
 
-# Full serving benchmark -> BENCH_serving.json (TTFT + tok/s, all modes).
+# Full serving benchmark -> BENCH_serving.json (closed-loop TTFT + the
+# open-loop load sweep: p50/p99 TTFT and goodput per quant mode).
 bench-serving:
 	$(PY) benchmarks/bench_serving.py

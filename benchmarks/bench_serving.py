@@ -1,27 +1,36 @@
-"""Serving benchmark: time-to-first-token and throughput, prefill-in-decode
-vs chunked prefill, across numerics modes (float / abfp-kernel / abfp-packed).
+"""Serving benchmark: closed-loop TTFT (prefill-in-decode vs chunked
+prefill) plus an OPEN-LOOP load sweep with per-request SLO metrics, across
+numerics modes (float / abfp-kernel / abfp-packed).
 
-Chunked prefill admits prompts in bucketed multi-token chunks (one jitted
-pass per chunk, matmuls at M = capacity * chunk) instead of one decode tick
-per prompt token, so TTFT drops from O(prompt_len) sequential full-model
-passes to O(prompt_len / chunk).
-
-    PYTHONPATH=src python benchmarks/bench_serving.py          # -> BENCH_serving.json
-    PYTHONPATH=src python benchmarks/bench_serving.py --smoke  # tiny shapes; asserts
-                                                               # chunked is not slower
-
-Timing protocol: each (mode, chunked) cell builds a fresh engine, runs a
-small warmup workload that touches every jit shape the timed run needs
-(decode tick + each prefill bucket), then times one full workload: TTFT is
-wall time from first admission until EVERY request has its first token
+Closed loop: each (mode, chunked) cell builds a fresh engine, runs a small
+warmup workload that touches every jit shape the timed run needs (decode
+tick + each prefill bucket), then times one full workload: TTFT is wall
+time from first admission until EVERY request has its first token
 (requests == capacity, all admitted at once); throughput is generated
 tokens over the full run.
+
+Open loop: the engine runs on the WALL clock (``clock=time.perf_counter``)
+and requests arrive by a Poisson process whose rate is a ``--loads``
+multiple of the calibrated closed-loop service rate.  Reported per cell:
+p50/p99 TTFT, p50 TPOT, and goodput (requests finishing within the TTFT
+SLO per second; the SLO is 3x the calibrated per-request p50 TTFT).
+
+    PYTHONPATH=src python benchmarks/bench_serving.py         # BENCH_serving.json
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke # tiny shapes; writes
+                                                              # pass/fail + ratio to
+                                                              # BENCH_serving_smoke.json
+
+The smoke gate (`make bench-smoke`, part of `make test-fast` and CI) fails
+when chunked prefill is slower than prefill-in-decode; its JSON artifact
+records the measured ratio either way so CI shows the number when the gate
+trips.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 from pathlib import Path
 
@@ -66,25 +75,80 @@ def _run(eng, reqs):
     return ttft, total, sum(len(r.generated) for r in reqs), eng.ticks - ticks0
 
 
+def _warm(eng, mcfg, *, chunked, chunks, capacity, max_len):
+    """Compile every shape a timed run could hit: the decode tick and
+    (chunked only) each prefill bucket."""
+    warm_lens = ({min(c, max_len - 2) for c in chunks} if chunked else {2})
+    for warm_prompt in sorted(warm_lens):
+        _run(eng, _workload(mcfg, min(2, capacity), warm_prompt, 2, seed=99))
+
+
 def bench_cell(params, mcfg, *, mode, chunked, capacity, prompt_len,
                max_new, max_len, chunks, seed):
     eng = ServingEngine(params, mcfg, capacity=capacity, max_len=max_len,
                         quant=_quant(mode), seed=seed, chunked=chunked,
                         prefill_chunks=chunks)
-    # Warmup compiles every shape the timed run could hit: the decode tick
-    # and (chunked only) each prefill bucket — one tiny workload per bucket
-    # at prompt_len == bucket, so no compile lands in the timed region
-    # regardless of --prompt-len.  Warm prompts are capped at max_len - 2
-    # (admission guard); the cap selects the same bucket as the largest
-    # admissible timed prompt, so every reachable bucket still gets warmed.
-    warm_lens = ({min(c, max_len - 2) for c in chunks} if chunked else {2})
-    for warm_prompt in sorted(warm_lens):
-        _run(eng, _workload(mcfg, min(2, capacity), warm_prompt, 2, seed=99))
+    # Warm prompts are capped at max_len - 2 (admission guard); the cap
+    # selects the same bucket as the largest admissible timed prompt, so
+    # every reachable bucket still gets warmed.
+    _warm(eng, mcfg, chunked=chunked, chunks=chunks, capacity=capacity,
+          max_len=max_len)
     ttft, total, toks, ticks = _run(
         eng, _workload(mcfg, capacity, prompt_len, max_new, seed=seed))
     return {"mode": mode, "chunked": chunked, "ttft_s": round(ttft, 4),
             "total_s": round(total, 4), "tok_per_s": round(toks / total, 2),
             "ticks": ticks}
+
+
+def bench_open_loop(params, mcfg, *, mode, load, capacity, prompt_len,
+                    max_new, max_len, chunks, seed, n_requests,
+                    slo_scale=3.0):
+    """One open-loop cell: wall-clock engine, Poisson arrivals at ``load``
+    x the calibrated service rate, FCFS admission."""
+    eng = ServingEngine(params, mcfg, capacity=capacity, max_len=max_len,
+                        quant=_quant(mode), seed=seed, chunked=True,
+                        prefill_chunks=chunks, policy="fcfs",
+                        clock=time.perf_counter)
+    _warm(eng, mcfg, chunked=True, chunks=chunks, capacity=capacity,
+          max_len=max_len)
+
+    # Calibrate: closed-loop service rate and per-request TTFT at full
+    # occupancy (engine metrics are in wall seconds — clock=perf_counter).
+    eng.metrics.reset()
+    _, total_s, _, _ = _run(
+        eng, _workload(mcfg, capacity, prompt_len, max_new, seed=seed + 1))
+    service_rps = capacity / total_s
+    calib = eng.metrics.summary()
+    slo_ttft = slo_scale * calib["ttft"]["p50"]
+
+    eng.metrics.reset()
+    rate = load * service_rps
+    rng = np.random.default_rng(seed)
+    offsets = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    t0 = time.perf_counter()
+    for i, off in enumerate(offsets):
+        eng.submit(Request(uid=10_000 + i,
+                           prompt=rng.integers(
+                               1, mcfg.vocab_size, prompt_len).tolist(),
+                           max_new_tokens=max_new,
+                           arrival_time=t0 + float(off)))
+    done = eng.drain()
+    duration = time.perf_counter() - t0
+    s = eng.metrics.summary()
+    good = eng.metrics.goodput(slo_ttft, duration=duration)
+
+    def _round(v, nd=4):
+        return None if v is None else round(v, nd)
+
+    return {"mode": mode, "load": load,
+            "arrival_rate_rps": round(rate, 2),
+            "ttft_p50_s": _round(s["ttft"]["p50"]),
+            "ttft_p99_s": _round(s["ttft"]["p99"]),
+            "tpot_p50_s": _round(s["tpot"]["p50"]),   # None when max_new==1
+            "slo_ttft_s": round(slo_ttft, 4),
+            "goodput_rps": _round(good, 2),
+            "finished": len(done),
+            "max_queue_depth": s["queue_depth"]["max"]}
 
 
 def main() -> None:
@@ -96,21 +160,31 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=320)
     ap.add_argument("--modes", default="float,abfp-kernel,abfp-packed")
     ap.add_argument("--chunks", default="16,64,128")
+    ap.add_argument("--loads", default="0.5,0.9",
+                    help="open-loop arrival rates as multiples of the "
+                         "calibrated closed-loop service rate")
+    ap.add_argument("--open-requests", type=int, default=None,
+                    help="requests per open-loop cell (default 2*capacity)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: BENCH_serving.json at "
-                         "the repo root; --smoke writes nothing by default)")
+                         "the repo root; BENCH_serving_smoke.json with "
+                         "--smoke)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny shapes, float only; asserts the chunked path "
-                         "is not slower than prefill-in-decode")
+                    help="tiny shapes, float only; gates on the chunked "
+                         "path not being slower than prefill-in-decode and "
+                         "writes a machine-readable pass/fail JSON")
     args = ap.parse_args()
 
     if args.smoke:
         args.prompt_len, args.capacity, args.max_new = 48, 2, 2
         args.max_len, args.modes, args.chunks = 64, "float", "8,16"
+        args.loads = "0.8"
 
     mcfg = smoke_config(args.arch)
     chunks = tuple(int(c) for c in args.chunks.split(","))
+    loads = tuple(float(x) for x in args.loads.split(","))
+    n_open = args.open_requests or 2 * args.capacity
     params = init_params(jax.random.PRNGKey(args.seed), mcfg)
     print(f"[bench_serving] {args.arch} (reduced): "
           f"{param_count(params)/1e6:.1f}M params, prompt_len="
@@ -130,26 +204,53 @@ def main() -> None:
               f"tok/s {base['tok_per_s']:8.1f} -> {chnk['tok_per_s']:8.1f}   "
               f"ticks {base['ticks']} -> {chnk['ticks']}")
 
+    open_rows = []
+    for mode in args.modes.split(","):
+        for load in loads:
+            row = bench_open_loop(
+                params, mcfg, mode=mode, load=load,
+                capacity=args.capacity, prompt_len=args.prompt_len,
+                max_new=args.max_new, max_len=args.max_len, chunks=chunks,
+                seed=args.seed, n_requests=n_open)
+            open_rows.append(row)
+            print(f"  {mode:12s} load {load:3.1f}  "
+                  f"ttft p50 {row['ttft_p50_s']:7.3f}s "
+                  f"p99 {row['ttft_p99_s']:7.3f}s  "
+                  f"goodput {row['goodput_rps']} req/s "
+                  f"(slo {row['slo_ttft_s']:.3f}s)  "
+                  f"qdepth<= {row['max_queue_depth']}")
+
+    gate_ok = (speedups.get("float", 1.0) >= 1.0)
     result = {
-        "benchmark": "serving_ttft",
+        "benchmark": "serving_smoke" if args.smoke else "serving_ttft",
         "arch": args.arch, "reduced": True,
         "prompt_len": args.prompt_len, "capacity": args.capacity,
         "max_new": args.max_new, "prefill_chunks": list(chunks),
         "backend": jax.default_backend(),
         "rows": rows, "speedup_ttft": speedups,
+        "open_loop": open_rows,
     }
+    if args.smoke:
+        # Machine-readable gate verdict: CI uploads this artifact, so the
+        # measured ratio is visible even (especially) when the gate trips.
+        result["gate"] = {"pass": bool(gate_ok),
+                          "metric": "speedup_ttft.float",
+                          "measured": speedups.get("float"),
+                          "threshold": 1.0}
+
     out = args.out
-    if out is None and not args.smoke:
-        out = str(Path(__file__).resolve().parent.parent
-                  / "BENCH_serving.json")
-    if out:
-        Path(out).write_text(json.dumps(result, indent=2) + "\n")
-        print(f"[bench_serving] wrote {out}")
+    if out is None:
+        root = Path(__file__).resolve().parent.parent
+        out = str(root / ("BENCH_serving_smoke.json" if args.smoke
+                          else "BENCH_serving.json"))
+    Path(out).write_text(json.dumps(result, indent=2) + "\n")
+    print(f"[bench_serving] wrote {out}")
 
     if args.smoke:
-        assert speedups["float"] >= 1.0, (
-            f"chunked prefill slower than prefill-in-decode: "
-            f"{speedups['float']}x")
+        if not gate_ok:
+            print(f"[bench_serving] smoke FAIL: chunked prefill slower "
+                  f"than prefill-in-decode ({speedups['float']}x < 1.0)")
+            sys.exit(1)
         print(f"[bench_serving] smoke OK: chunked {speedups['float']}x "
               f"faster TTFT")
 

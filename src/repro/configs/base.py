@@ -147,7 +147,8 @@ def smoke_config(name: str) -> ModelConfig:
         num_layers=min(cfg.num_layers, len(cfg.block_pattern) or 2),
         d_model=128,
         num_heads=4,
-        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads < cfg.num_heads else 4,
+        num_kv_heads=(min(cfg.num_kv_heads, 2)
+                      if cfg.num_kv_heads < cfg.num_heads else 4),
         head_dim=32,
         d_ff=256 if cfg.d_ff else 0,
         vocab_size=512,

@@ -416,7 +416,8 @@ def quantize_input_tiles(x: Array, cfg: QuantConfig):
     return x_q, s_x
 
 
-def adc(p_codes: Array, cfg: QuantConfig, noise_lsb_draw: Optional[Array] = None) -> Array:
+def adc(p_codes: Array, cfg: QuantConfig,
+        noise_lsb_draw: Optional[Array] = None) -> Array:
     """Eq. 5/7 in code units: the ADC conversion of an exact integer partial
     product.  Returns output codes in [-L_y, +L_y]; the represented value is
     ``codes * bin_y`` (bin_y = n*delta_y, clamp tau_Y = n).
@@ -510,7 +511,8 @@ def abfp_matmul(
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(2,))
-def abfp_matmul_ste(x: Array, w: Array, cfg: QuantConfig, key: Optional[Array] = None) -> Array:
+def abfp_matmul_ste(x: Array, w: Array, cfg: QuantConfig,
+                    key: Optional[Array] = None) -> Array:
     """ABFP forward, straight-through backward (gradients of the plain matmul).
 
     Eq. 8: dL/dx = dL/dy . W^T, dL/dW = x^T . dL/dy — accumulated in FLOAT32.

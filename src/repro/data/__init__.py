@@ -1,2 +1,6 @@
 """repro.data — deterministic synthetic pipeline."""
-from repro.data.synthetic import DataConfig, SyntheticDataset, batch_at_step  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    DataConfig,
+    SyntheticDataset,
+    batch_at_step,
+)

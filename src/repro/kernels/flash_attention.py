@@ -85,8 +85,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
     @pl.when(ki == nk - 1)
     def _done():
-        l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        den = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / den[:, None]).astype(o_ref.dtype)
 
 
 def _ceil_to(v: int, m: int) -> int:

@@ -1,14 +1,34 @@
-"""Serving driver: batched requests through the continuous-batching engine,
-in FLOAT or ABFP (the AMS-deployment simulation).
+"""Serving driver: closed-loop batch or arrival-driven open-loop serving
+through the continuous-batching engine, in FLOAT or ABFP (the
+AMS-deployment simulation).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
-        --reduced --requests 16 --quant abfp
+Closed loop (historical behavior — admit everything, run to completion):
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 16 --quant abfp
+
+Open loop (Poisson arrivals on the simulated clock, scheduling policy,
+SLO metrics):
+
+    PYTHONPATH=src python -m repro.launch.serve --arrival-rate 2.0 \
+        --policy sjf --tenants 2
+
+Trace replay: ``--trace FILE`` where FILE is a JSON list of requests,
+each ``{"arrival_time": float, "prompt": [ints]}`` or
+``{"arrival_time": float, "prompt_len": int}`` plus optional
+``max_new_tokens`` / ``priority`` / ``tenant`` / ``temperature``.
+
+Open-loop runs print p50/p99 TTFT, TPOT, and E2E in simulated ticks (one
+tick = one jitted pass) plus goodput against ``--slo-ttft``;
+``--metrics-out`` dumps the full percentile summary as JSON
+(see ``repro.serving.metrics``).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from typing import List
 
 import jax
 import numpy as np
@@ -19,10 +39,51 @@ from repro.models import init_params, param_count
 from repro.serving import Request, ServingEngine
 
 
+def poisson_workload(mcfg, args, rng: np.random.Generator) -> List[Request]:
+    """Mixed-tenant Poisson arrivals: exponential inter-arrival gaps at
+    ``--arrival-rate`` requests per simulated tick, prompt lengths drawn
+    uniformly from [1, 2 * --prompt-len - 1]."""
+    gaps = rng.exponential(1.0 / args.arrival_rate, args.requests)
+    arrivals = np.cumsum(gaps)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(1, max(2, 2 * args.prompt_len)))
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(1, mcfg.vocab_size, plen).tolist(),
+            max_new_tokens=args.max_new,
+            temperature=args.temperature,
+            arrival_time=float(arrivals[i]),
+            priority=int(rng.integers(0, 3)),
+            tenant=f"t{int(rng.integers(args.tenants))}"))
+    return reqs
+
+
+def trace_workload(mcfg, args, rng: np.random.Generator) -> List[Request]:
+    entries = json.loads(open(args.trace).read())
+    reqs = []
+    for i, e in enumerate(entries):
+        prompt = e.get("prompt")
+        if prompt is None:
+            plen = int(e.get("prompt_len", args.prompt_len))
+            prompt = rng.integers(1, mcfg.vocab_size, plen).tolist()
+        reqs.append(Request(
+            uid=i, prompt=list(prompt),
+            max_new_tokens=int(e.get("max_new_tokens", args.max_new)),
+            temperature=float(e.get("temperature", args.temperature)),
+            arrival_time=float(e.get("arrival_time", 0.0)),
+            priority=int(e.get("priority", 0)),
+            tenant=str(e.get("tenant", "default"))))
+    return reqs
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="reduced (smoke) shapes — the default")
+    ap.add_argument("--full", dest="reduced", action="store_false",
+                    help="full-size architecture config")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--capacity", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
@@ -37,12 +98,28 @@ def main() -> None:
     ap.add_argument("--gain", type=float, default=8.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--prompt-len", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--no-chunked", action="store_true",
                     help="legacy prefill-in-decode: one prompt token per "
                          "decode tick instead of bucketed prefill chunks")
     ap.add_argument("--prefill-chunks", default="16,64,128",
                     help="comma-separated chunk buckets for prefill passes "
                          "(one jit compile each)")
+    # Open-loop serving (arrival-driven; omit both for the closed loop).
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="Poisson arrival rate in requests per simulated "
+                         "tick; enables the open-loop submit/poll path")
+    ap.add_argument("--trace", default=None,
+                    help="JSON trace of requests to replay (see module "
+                         "docstring for the schema)")
+    ap.add_argument("--policy", choices=("fcfs", "sjf", "priority"),
+                    default="fcfs", help="admission scheduling policy")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="number of synthetic tenants for Poisson workloads")
+    ap.add_argument("--slo-ttft", type=float, default=8.0,
+                    help="TTFT SLO in simulated ticks (goodput threshold)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the percentile metrics summary JSON here")
     args = ap.parse_args()
 
     mcfg = smoke_config(args.arch) if args.reduced else get_config(args.arch)
@@ -55,26 +132,66 @@ def main() -> None:
              if mode != "float" else QuantConfig(mode="float"))
 
     print(f"[serve] {args.arch}: {param_count(params)/1e6:.1f}M params, "
-          f"quant={args.quant}")
+          f"quant={args.quant}, policy={args.policy}")
     eng = ServingEngine(params, mcfg, capacity=args.capacity,
                         max_len=args.max_len, quant=quant, seed=args.seed,
                         chunked=not args.no_chunked,
+                        policy=args.policy,
                         prefill_chunks=tuple(
                             int(c) for c in args.prefill_chunks.split(",")))
     rng = np.random.default_rng(args.seed)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(1, mcfg.vocab_size,
-                                        args.prompt_len).tolist(),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
-    t0 = time.time()
-    done = eng.run(reqs)
-    dt = time.time() - t0
+
+    open_loop = args.arrival_rate is not None or args.trace is not None
+    if open_loop:
+        reqs = (trace_workload(mcfg, args, rng) if args.trace
+                else poisson_workload(mcfg, args, rng))
+        for r in reqs:
+            eng.submit(r)
+        span = max(r.arrival_time for r in reqs) if reqs else 0.0
+        print(f"[serve] open-loop: {len(reqs)} requests arriving over "
+              f"{span:.1f} ticks, {args.tenants} tenants")
+        t0 = time.time()
+        done = eng.drain()
+        dt = time.time() - t0
+    else:
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(1, mcfg.vocab_size,
+                                            args.prompt_len).tolist(),
+                        max_new_tokens=args.max_new,
+                        temperature=args.temperature)
+                for i in range(args.requests)]
+        t0 = time.time()
+        done = eng.run(reqs)
+        dt = time.time() - t0
+
     tokens = sum(len(r.generated) for r in done)
     print(f"[serve] {len(done)} requests, {tokens} tokens in {dt:.1f}s "
           f"({tokens/dt:.1f} tok/s, {eng.ticks} ticks)")
+
+    s = eng.metrics.summary()
+    ttft, tpot, e2e = s["ttft"], s["tpot"], s["e2e"]
+
+    def fmt(d, key):
+        v = d[key]
+        return "-" if v is None else f"{v:.2f}"
+
+    print(f"[serve] TTFT p50 {fmt(ttft, 'p50')} / p99 {fmt(ttft, 'p99')} "
+          f"ticks | TPOT p50 {fmt(tpot, 'p50')} / p99 {fmt(tpot, 'p99')} "
+          f"ticks | E2E p50 {fmt(e2e, 'p50')} / p99 {fmt(e2e, 'p99')} ticks")
+    good = eng.metrics.goodput(args.slo_ttft)
+    util = s["utilization"]["mean"]
+    print(f"[serve] goodput {good if good is None else round(good, 3)} "
+          f"req/tick (TTFT<={args.slo_ttft}), utilization "
+          f"{'-' if util is None else f'{util:.0%}'}, max queue depth "
+          f"{s['queue_depth']['max']}")
+    if args.metrics_out:
+        eng.metrics.to_json(args.metrics_out, policy=args.policy,
+                            quant=args.quant,
+                            slo_ttft=args.slo_ttft,
+                            goodput_per_tick=good)
+        print(f"[serve] wrote {args.metrics_out}")
     for r in done[:3]:
-        print(f"  req {r.uid}: prompt={r.prompt} -> {r.generated}")
+        print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.generated}")
 
 
 if __name__ == "__main__":

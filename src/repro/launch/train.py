@@ -17,7 +17,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import checkpoint as ckpt
 from repro.configs import get_config, smoke_config

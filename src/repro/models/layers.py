@@ -10,7 +10,6 @@ FLOAT32, per the paper (Sec. V: range-sensitive ops stay digital).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
@@ -109,7 +108,8 @@ def rope(x: Array, positions: Array, theta: float, fraction: float) -> Array:
     ang = positions[..., None].astype(jnp.float32) * freq    # (B, S, half)
     cos = jnp.cos(ang)[:, :, None, :]
     sin = jnp.sin(ang)[:, :, None, :]
-    x1, x2 = x_rot[..., :half].astype(jnp.float32), x_rot[..., half:].astype(jnp.float32)
+    x1 = x_rot[..., :half].astype(jnp.float32)
+    x2 = x_rot[..., half:].astype(jnp.float32)
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
     return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
 
@@ -179,7 +179,7 @@ def chunked_attention(
     neg = jnp.float32(-1e30)
 
     def step(carry, xs):
-        m, l, acc = carry
+        m, den, acc = carry
         k_c, v_c, t = xs
         kpos = t * chunk + jnp.arange(chunk)                # (c,)
         s = jnp.einsum("bshd,bchd->bhsc", qf, k_c)          # (B, H, Sq, c)
@@ -192,17 +192,17 @@ def chunked_attention(
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=-1)
+        den_new = den * corr + jnp.sum(p, axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum("bhsc,bchd->bhsd", p, v_c)
-        return (m_new, l_new, acc_new), None
+        return (m_new, den_new, acc_new), None
 
     m0 = jnp.full((b, h, sq), neg, jnp.float32)
-    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    den0 = jnp.zeros((b, h, sq), jnp.float32)
     a0 = jnp.zeros((b, h, sq, d), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(
-        step, (m0, l0, a0), (kc, vc, jnp.arange(nchunks)))
+    (m, den, acc), _ = jax.lax.scan(
+        step, (m0, den0, a0), (kc, vc, jnp.arange(nchunks)))
 
-    out = acc / jnp.maximum(l, 1e-30)[..., None]            # (B, H, Sq, D)
+    out = acc / jnp.maximum(den, 1e-30)[..., None]          # (B, H, Sq, D)
     return jnp.moveaxis(out, 1, 2).astype(q.dtype)          # (B, Sq, H, D)
 
 
@@ -537,7 +537,8 @@ def init_attention(key, mcfg, layer_shape=()) -> dict:
     k1, k2, k3, k4 = jax.random.split(key, 4)
     std = d ** -0.5
     shape = lambda *s: layer_shape + s  # noqa: E731
-    init = lambda k, *s: (jax.random.normal(k, shape(*s)) * std).astype(mcfg.param_dtype)  # noqa: E731
+    init = lambda k, *s: (  # noqa: E731
+        jax.random.normal(k, shape(*s)) * std).astype(mcfg.param_dtype)
     return {
         "wq": init(k1, d, h * hd),
         "wk": init(k2, d, kh * hd),
@@ -635,7 +636,8 @@ def init_mlp(key, mcfg, layer_shape=()) -> dict:
         "wo": (jax.random.normal(k2, shape(f, d)) * f**-0.5).astype(mcfg.param_dtype),
     }
     if mcfg.mlp_type in ("swiglu", "geglu"):
-        p["wg"] = (jax.random.normal(k3, shape(d, f)) * d**-0.5).astype(mcfg.param_dtype)
+        p["wg"] = (jax.random.normal(k3, shape(d, f))
+                   * d**-0.5).astype(mcfg.param_dtype)
     return p
 
 

@@ -23,7 +23,6 @@ renormalized gates + switch-style load-balancing aux loss):
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,9 +38,12 @@ def init_moe(key, mcfg, layer_shape=()) -> dict:
     shape = lambda *s: layer_shape + s  # noqa: E731
     return {
         "router": (jax.random.normal(k1, shape(d, e)) * d**-0.5).astype(jnp.float32),
-        "wi": (jax.random.normal(k2, shape(e, d, f)) * d**-0.5).astype(mcfg.param_dtype),
-        "wg": (jax.random.normal(k3, shape(e, d, f)) * d**-0.5).astype(mcfg.param_dtype),
-        "wo": (jax.random.normal(k4, shape(e, f, d)) * f**-0.5).astype(mcfg.param_dtype),
+        "wi": (jax.random.normal(k2, shape(e, d, f))
+               * d**-0.5).astype(mcfg.param_dtype),
+        "wg": (jax.random.normal(k3, shape(e, d, f))
+               * d**-0.5).astype(mcfg.param_dtype),
+        "wo": (jax.random.normal(k4, shape(e, f, d))
+               * f**-0.5).astype(mcfg.param_dtype),
     }
 
 

@@ -279,7 +279,8 @@ def mlstm_block(params, x: Array, mcfg, nx: Numerics,
         qf, kf, vf, log_i, log_f,
         (state["C"], state["n"], state["m"]), chunk_eff, valid)
     h = h.transpose(0, 2, 1, 3).reshape(b, s, inner)
-    h = h + params["skip_scale"][None, None].astype(jnp.float32) * up.astype(jnp.float32)
+    h = h + (params["skip_scale"][None, None].astype(jnp.float32)
+             * up.astype(jnp.float32))
     y = nx.dense((h * gate).astype(x.dtype), params["w_down"])
     return y, {"C": c_new, "n": n_new, "m": m_new}
 

@@ -1,2 +1,16 @@
-"""repro.serving — continuous-batching engine (ABFP or float numerics)."""
+"""repro.serving — arrival-driven continuous-batching engine (ABFP or
+float numerics): engine core + pluggable schedulers + SLO metrics."""
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.metrics import (  # noqa: F401
+    RequestMetrics,
+    ServingMetrics,
+    percentile_summary,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    POLICIES,
+    FCFSScheduler,
+    PriorityScheduler,
+    Scheduler,
+    ShortestPromptFirst,
+    get_scheduler,
+)

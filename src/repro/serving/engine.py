@@ -1,4 +1,5 @@
-"""Batched serving engine: continuous batching with chunked prefill.
+"""Batched serving engine core: continuous batching with chunked prefill,
+arrival-driven admission, and streaming.
 
 Tick model
 ----------
@@ -21,6 +22,26 @@ M = capacity * chunk — the MXU-friendly shapes the packed ABFP kernel is
 time-to-first-token win; ``chunked=False`` restores the legacy
 prefill-in-decode behavior for comparison).
 
+Open-loop serving
+-----------------
+``submit()`` enqueues a request with an ``arrival_time`` (defaulting to the
+engine clock "now"); ``poll()`` admits every arrived request the active
+scheduling policy picks (``repro.serving.scheduler``: fcfs / sjf /
+priority with per-tenant fairness), runs one ``step()``, and returns the
+requests that finished during that pass.  The clock is SIMULATED by
+default — each jitted pass advances ``tick_time`` — so arrival-driven tests
+are fully deterministic; pass ``clock=time.perf_counter`` for wall-clock
+serving (the open-loop benchmark does).  When the batch is idle and every
+queued request is still in the future, ``poll()`` jumps the simulated
+clock to the next arrival instead of burning empty ticks.
+
+Per-request TTFT/TPOT/E2E, tick utilization, and queue depth are recorded
+in ``engine.metrics`` (``repro.serving.metrics.ServingMetrics``); each
+generated token is also streamed to ``Request.on_token`` the moment it is
+sampled.  ``run()`` is a thin closed-loop compatibility wrapper (submit
+everything at "now", drain FCFS) and is bit-identical to the historical
+static-batch runner for greedy same-seed workloads.
+
 Bucketing policy
 ----------------
 Chunk lengths are drawn from the small static set ``prefill_chunks`` (the
@@ -41,12 +62,18 @@ HBM traffic.  Float-mode chunked prefill is bit-identical to the token-by-
 token path; ABFP modes are statistically equivalent only (the kernel's
 noise PRNG salts by grid position, and chunked grids differ from
 decode-shaped grids — same noise distribution, different draws).
+
+Sampling: ``temperature == 0`` decodes greedily (argmax); ``temperature >
+0`` samples from the temperature-scaled softmax using a stream seeded by
+(engine seed, request uid, token index), so draws are reproducible for a
+given engine seed regardless of how requests interleave across ticks.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+import time
+from typing import Callable, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +83,8 @@ from repro.configs.base import ModelConfig
 from repro.core.abfp import QuantConfig
 from repro.models import decode_step, init_decode_state, prefill
 from repro.models.layers import Numerics
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import Scheduler, get_scheduler
 
 
 @dataclasses.dataclass
@@ -64,6 +93,10 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     temperature: float = 0.0
+    arrival_time: Optional[float] = None    # engine clock; None = at submit
+    priority: int = 0                       # larger = served first
+    tenant: str = "default"                 # fairness domain for `priority`
+    on_token: Optional[Callable[["Request", int], None]] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     prompt_pos: int = 0                 # prompt tokens consumed so far
     done: bool = False
@@ -75,7 +108,10 @@ class ServingEngine:
                  quant: QuantConfig = QuantConfig(mode="float"),
                  seed: int = 0,
                  prefill_chunks: Sequence[int] = (16, 64, 128),
-                 chunked: bool = True):
+                 chunked: bool = True,
+                 policy: Union[str, Scheduler] = "fcfs",
+                 tick_time: float = 1.0,
+                 clock: Optional[Callable[[], float]] = None):
         if quant.mode == "abfp_packed":
             # Quantize-once: pack every dense weight at admission time so
             # the per-tick decode path only streams int8 codes + bf16
@@ -87,6 +123,7 @@ class ServingEngine:
         self.capacity = capacity
         self.max_len = max_len
         self.quant = quant
+        self.seed = seed
         self.key = jax.random.PRNGKey(seed)
         self.state = init_decode_state(mcfg, capacity, max_len)
         self.slots: List[Optional[Request]] = [None] * capacity
@@ -94,6 +131,12 @@ class ServingEngine:
         self.ticks = 0
         self.prefill_chunks = tuple(sorted({int(c) for c in prefill_chunks}))
         self.chunked = chunked and bool(self.prefill_chunks)
+        self.scheduler = get_scheduler(policy)
+        self.metrics = ServingMetrics(capacity)
+        self.tick_time = float(tick_time)
+        self._clock = clock             # None => simulated (tick_time/pass)
+        self.now = clock() if clock is not None else 0.0
+        self._just_finished: List[Request] = []
 
         def _step(params, state, token, key):
             nx = Numerics(quant, key)
@@ -127,7 +170,15 @@ class ServingEngine:
         # state rebuild that scales with model size.
         self._jit_reset = jax.jit(_reset, donate_argnums=(0,))
 
-    # -- slot state reset -----------------------------------------------------
+    # -- clock ----------------------------------------------------------------
+    def _tick_clock(self):
+        """One jitted pass just ran: advance the engine clock (simulated
+        ticks or wall time) BEFORE tokens from that pass are recorded."""
+        self.ticks += 1
+        self.now = (self._clock() if self._clock is not None
+                    else self.now + self.tick_time)
+
+    # -- slot state reset -------------------------------------------------
     def _reset_slot(self, i: int):
         self.state = self._jit_reset(self.state, jnp.int32(i))
 
@@ -142,6 +193,23 @@ class ServingEngine:
                 and len(req.prompt) + max(1, req.max_new_tokens)
                 <= self.max_len)
 
+    def submit(self, req: Request) -> bool:
+        """Enqueue a request for arrival-driven admission.  Stamps
+        ``arrival_time`` with the current clock when unset.  Oversized
+        requests are rejected (marked done, recorded in metrics) instead of
+        crashing the serve loop; returns False for those."""
+        if not self.fits(req):
+            req.done = True
+            self.metrics.on_reject(req.uid)
+            return False
+        if req.arrival_time is None:
+            req.arrival_time = self.now
+        self.metrics.on_submit(req.uid, arrival_time=req.arrival_time,
+                               tenant=req.tenant,
+                               prompt_len=len(req.prompt))
+        self.scheduler.add(req)
+        return True
+
     def try_admit(self, req: Request) -> bool:
         if not self.fits(req):
             raise ValueError(
@@ -152,6 +220,11 @@ class ServingEngine:
             if slot is None:
                 self._reset_slot(i)
                 self.slots[i] = req
+                if req.arrival_time is None:
+                    req.arrival_time = self.now
+                self.metrics.on_admit(req.uid, self.now, tenant=req.tenant,
+                                      prompt_len=len(req.prompt),
+                                      arrival_time=req.arrival_time)
                 if self.chunked:
                     req.prompt_pos = 0      # consumed by prefill passes
                 else:
@@ -161,28 +234,58 @@ class ServingEngine:
                 return True
         return False
 
+    def _admit_arrived(self) -> List[Request]:
+        """Fill free slots from the scheduler queue (policy order) with
+        requests that have arrived by the current clock."""
+        admitted: List[Request] = []
+        free = self.slots.count(None)
+        while free > 0:
+            req = self.scheduler.pop(self.now)
+            if req is None:
+                break
+            self.try_admit(req)     # a slot is free; fits() held at submit
+            admitted.append(req)
+            free -= 1
+        return admitted
+
     # -- sampling -------------------------------------------------------------
     def _record(self, i: int, req: Request, logits_row: np.ndarray):
         if req.temperature > 0:
-            z = logits_row / req.temperature
+            # Temperature sampling from the engine's seeded stream: the
+            # draw is keyed by (engine seed, uid, token index), so outputs
+            # are reproducible for a given engine seed no matter how the
+            # scheduler interleaves this request with others.
+            z = logits_row.astype(np.float64) / req.temperature
             z -= z.max()
             p = np.exp(z)
             p /= p.sum()
-            nxt = int(np.random.default_rng(req.uid * 7919 + len(req.generated))
-                      .choice(len(p), p=p))
+            rng = np.random.default_rng(
+                (self.seed, req.uid, len(req.generated)))
+            nxt = int(rng.choice(len(p), p=p))
         else:
             nxt = int(np.argmax(logits_row))
         req.generated.append(nxt)
         self._next_input[i] = nxt
+        self.metrics.on_token(req.uid, self.now)
+        if req.on_token is not None:
+            req.on_token(req, nxt)
         if len(req.generated) >= req.max_new_tokens:
             req.done = True
             self.slots[i] = None            # free for the next request
+            self.metrics.on_finish(req.uid, self.now)
+            self._just_finished.append(req)
 
     # -- one engine tick ------------------------------------------------------
     def step(self):
+        # Completion flushing happens per pass (not only per poll) so a
+        # long-lived engine driven through the legacy try_admit()/step()
+        # path never accumulates finished Request objects.
+        self._just_finished = []
         live = [i for i, s in enumerate(self.slots) if s is not None]
         if not live:
             return
+        self.metrics.on_tick(self.now, len(live), self.capacity,
+                             self.scheduler.pending(self.now))
         prefilling = [i for i in live
                       if self.slots[i].prompt_pos < len(self.slots[i].prompt)]
         if self.chunked and prefilling:
@@ -225,7 +328,7 @@ class ServingEngine:
             self.params, self.state, jnp.asarray(tokens),
             jnp.asarray(need), sub)
         logits = np.asarray(logits, np.float32)
-        self.ticks += 1
+        self._tick_clock()
 
         for i in live:
             req = self.slots[i]
@@ -242,7 +345,7 @@ class ServingEngine:
         self.key, sub = jax.random.split(self.key)
         logits, self.state = self._jit_step(self.params, self.state, token, sub)
         logits = np.asarray(logits, np.float32)
-        self.ticks += 1
+        self._tick_clock()
 
         for i, req in enumerate(self.slots):
             if req is None:
@@ -254,25 +357,50 @@ class ServingEngine:
                 continue
             self._record(i, req, logits[i])
 
+    # -- open-loop API ----------------------------------------------------
+    def poll(self) -> List[Request]:
+        """One arrival-driven engine round: sync the clock, admit every
+        arrived request the policy picks, run one ``step()``.  Returns the
+        requests that FINISHED during this poll (possibly empty).  With the
+        simulated clock an idle engine jumps straight to the next arrival;
+        with a real clock it returns immediately and the caller re-polls."""
+        if self._clock is not None:
+            self.now = self._clock()
+        self._admit_arrived()
+        if all(s is None for s in self.slots):
+            nxt = self.scheduler.next_arrival()
+            if nxt is None:
+                return []                   # fully drained
+            if self._clock is not None:
+                # Real time hasn't caught up to the next arrival: nap
+                # (capped) instead of letting drain() busy-spin a core
+                # through the inter-arrival gap.
+                if nxt > self.now:
+                    time.sleep(min(nxt - self.now, 0.01))
+                return []
+            self.now = max(self.now, nxt)
+            self._admit_arrived()
+        self.step()
+        return list(self._just_finished)
+
+    def drain(self) -> List[Request]:
+        """Poll until the queue and every slot are empty; returns finished
+        requests in completion order."""
+        finished: List[Request] = []
+        while (len(self.scheduler)
+               or any(s is not None for s in self.slots)):
+            finished.extend(self.poll())
+        return finished
+
     def run(self, requests: List[Request]) -> List[Request]:
-        """Serve a workload to completion (FCFS admission).  Oversized
-        requests are rejected up front (marked done, nothing generated)
-        rather than crashing the serve loop mid-flight."""
-        pending = []
+        """Closed-loop compatibility wrapper: serve a static workload to
+        completion under the engine's policy (FCFS by default, matching the
+        historical behavior bit-for-bit for greedy same-seed workloads).
+        Oversized requests are rejected up front (marked done, nothing
+        generated) rather than crashing the serve loop mid-flight."""
         finished: List[Request] = []
         for r in requests:
-            if self.fits(r):
-                pending.append(r)
-            else:
-                r.done = True
+            if not self.submit(r):
                 finished.append(r)
-        inflight: List[Request] = []
-        while pending or inflight:
-            while pending and self.try_admit(pending[0]):
-                inflight.append(pending.pop(0))
-            self.step()
-            for r in list(inflight):
-                if r.done:
-                    inflight.remove(r)
-                    finished.append(r)
+        finished.extend(self.drain())
         return finished

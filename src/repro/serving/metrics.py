@@ -1,0 +1,206 @@
+"""Per-request latency accounting and fleet-level serving metrics.
+
+Timestamps come from the engine clock — simulated ticks by default (each
+jitted pass advances ``tick_time``), wall-clock seconds when the engine is
+built with ``clock=time.perf_counter``.  All derived latencies are plain
+differences, so the unit is whatever the clock counts in.
+
+Per request (``RequestMetrics``):
+  * TTFT  — first token time minus arrival (queueing + prefill).
+  * TPOT  — mean inter-token time after the first (decode cadence).
+  * E2E   — finish minus arrival.
+  * queue_delay — admit minus arrival (scheduler wait alone).
+
+Per fleet (``ServingMetrics``):
+  * tick utilization — live slots / capacity, sampled every jitted pass.
+  * queue depth — arrived-but-unadmitted requests, sampled every pass.
+  * percentile summaries (p50/p90/p99 by default) exported as JSON.
+  * goodput — finished requests meeting a TTFT SLO, per clock unit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Union
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    uid: int
+    tenant: str = "default"
+    prompt_len: int = 0
+    arrival_time: Optional[float] = None
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    n_tokens: int = 0
+    rejected: bool = False
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None or self.arrival_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean time-per-output-token after the first token; None for
+        single-token requests (no inter-token gap exists)."""
+        if (self.finish_time is None or self.first_token_time is None
+                or self.n_tokens < 2):
+            return None
+        return (self.finish_time - self.first_token_time) / (self.n_tokens - 1)
+
+    @property
+    def e2e(self) -> Optional[float]:
+        if self.finish_time is None or self.arrival_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+    @property
+    def queue_delay(self) -> Optional[float]:
+        if self.admit_time is None or self.arrival_time is None:
+            return None
+        return self.admit_time - self.arrival_time
+
+
+def percentile_summary(values: Iterable[Optional[float]],
+                       percentiles: Sequence[int] = (50, 90, 99)) -> Dict:
+    """``{"p50": ..., "p90": ..., "p99": ..., "mean": ..., "n": ...}`` over
+    the non-None values (all None when the sample is empty)."""
+    xs = [v for v in values if v is not None]
+    if not xs:
+        return {**{f"p{p}": None for p in percentiles},
+                "mean": None, "max": None, "n": 0}
+    arr = np.asarray(xs, dtype=np.float64)
+    out = {f"p{p}": float(np.percentile(arr, p)) for p in percentiles}
+    out["mean"] = float(arr.mean())
+    out["max"] = float(arr.max())
+    out["n"] = len(xs)
+    return out
+
+
+class ServingMetrics:
+    """Event-driven collector the engine feeds; holds one RequestMetrics per
+    uid (created lazily, so direct ``try_admit`` users are covered too)."""
+
+    def __init__(self, capacity: Optional[int] = None) -> None:
+        self.capacity = capacity
+        self.reset()
+
+    def reset(self) -> None:
+        self.requests: Dict[int, RequestMetrics] = {}
+        self.ticks = 0
+        self._utilization: List[float] = []
+        self._queue_depth: List[int] = []
+
+    # -- event hooks (engine-facing) --------------------------------------
+    def _req(self, uid: int) -> RequestMetrics:
+        return self.requests.setdefault(uid, RequestMetrics(uid=uid))
+
+    def on_submit(self, uid: int, *, arrival_time: float,
+                  tenant: str = "default", prompt_len: int = 0) -> None:
+        # A new submission of a uid is a new request: replace any completed
+        # record outright so reused uids (fresh workload, same engine) do
+        # not inherit stale token timestamps.
+        self.requests[uid] = RequestMetrics(
+            uid=uid, arrival_time=arrival_time, tenant=tenant,
+            prompt_len=prompt_len)
+
+    def on_reject(self, uid: int) -> None:
+        self.requests[uid] = RequestMetrics(uid=uid, rejected=True)
+
+    def on_admit(self, uid: int, now: float, *,
+                 tenant: Optional[str] = None,
+                 prompt_len: Optional[int] = None,
+                 arrival_time: Optional[float] = None) -> None:
+        r = self.requests.get(uid)
+        if r is None or r.finish_time is not None or r.rejected:
+            # Direct try_admit() (no submit) with a reused uid: start fresh.
+            r = self.requests[uid] = RequestMetrics(uid=uid)
+        r.admit_time = now
+        if tenant is not None:
+            r.tenant = tenant
+        if prompt_len is not None:
+            r.prompt_len = prompt_len
+        if r.arrival_time is None:
+            r.arrival_time = now if arrival_time is None else arrival_time
+
+    def on_token(self, uid: int, now: float) -> None:
+        r = self._req(uid)
+        r.n_tokens += 1
+        if r.first_token_time is None:
+            r.first_token_time = now
+
+    def on_finish(self, uid: int, now: float) -> None:
+        self._req(uid).finish_time = now
+
+    def on_tick(self, now: float, live: int, capacity: int,
+                queue_depth: int) -> None:
+        self.ticks += 1
+        self._utilization.append(live / max(1, capacity))
+        self._queue_depth.append(queue_depth)
+
+    # -- summaries ---------------------------------------------------------
+    def finished(self) -> List[RequestMetrics]:
+        return [r for r in self.requests.values()
+                if r.finish_time is not None]
+
+    def goodput(self, slo_ttft: float,
+                duration: Optional[float] = None) -> Optional[float]:
+        """Requests that finished with TTFT <= ``slo_ttft``, per clock unit.
+        ``duration`` defaults to the span from earliest arrival to last
+        finish."""
+        fin = self.finished()
+        if not fin:
+            return None
+        if duration is None:
+            arrivals = [r.arrival_time for r in fin
+                        if r.arrival_time is not None]
+            duration = max(r.finish_time for r in fin) - min(arrivals)
+        if duration <= 0:
+            return None
+        good = sum(1 for r in fin
+                   if r.ttft is not None and r.ttft <= slo_ttft)
+        return good / duration
+
+    def summary(self, percentiles: Sequence[int] = (50, 90, 99)) -> Dict:
+        fin = self.finished()
+        util = self._utilization
+        depth = self._queue_depth
+        return {
+            "requests": {
+                "submitted": len(self.requests),
+                "finished": len(fin),
+                "rejected": sum(1 for r in self.requests.values()
+                                if r.rejected),
+            },
+            "ttft": percentile_summary((r.ttft for r in fin), percentiles),
+            "tpot": percentile_summary((r.tpot for r in fin), percentiles),
+            "e2e": percentile_summary((r.e2e for r in fin), percentiles),
+            "queue_delay": percentile_summary(
+                (r.queue_delay for r in fin), percentiles),
+            "ticks": self.ticks,
+            "utilization": {
+                "mean": float(np.mean(util)) if util else None,
+                "min": float(np.min(util)) if util else None,
+            },
+            "queue_depth": {
+                "mean": float(np.mean(depth)) if depth else None,
+                "max": int(np.max(depth)) if depth else 0,
+            },
+        }
+
+    def to_json(self, path: Optional[Union[str, Path]] = None,
+                percentiles: Sequence[int] = (50, 90, 99), **extra) -> str:
+        """Serialize ``summary()`` (plus any ``extra`` top-level fields) to
+        JSON; write to ``path`` when given."""
+        doc = {**self.summary(percentiles), **extra}
+        text = json.dumps(doc, indent=2) + "\n"
+        if path is not None:
+            Path(path).write_text(text)
+        return text
