@@ -16,7 +16,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: lint test-fast test test-slow bench bench-smoke bench-serving
+.PHONY: lint test-fast test test-slow test-dist bench bench-smoke bench-serving
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \
@@ -38,6 +38,14 @@ test:
 # Only the @slow marker suite (the non-blocking CI job).
 test-slow:
 	$(PY) -m pytest -q -m slow
+
+# Sharded-serving suite on 8 forced placeholder CPU devices.  The @dist
+# tests self-skip below 8 devices, so the plain test-fast lane passes them
+# by; CI's second required leg runs the WHOLE fast lane under these flags
+# (make test-fast with XLA_FLAGS set), which includes this suite.
+test-dist:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+		$(PY) -m pytest -q -m dist
 
 bench:
 	$(PY) benchmarks/run.py

@@ -24,6 +24,12 @@ The smoke gate (`make bench-smoke`, part of `make test-fast` and CI) fails
 when chunked prefill is slower than prefill-in-decode; its JSON artifact
 records the measured ratio either way so CI shows the number when the gate
 trips.
+
+Full (non-smoke) runs also sweep sharded serving over mesh shapes
+(dp, tp) in {(1,1), (2,1), (1,2), (2,4)} on forced placeholder CPU
+devices — one subprocess per shape, since the XLA device-count flag binds
+at first jax use — and record per-shape closed-loop rows under
+``mesh_sweep`` in BENCH_serving.json (``--no-mesh-sweep`` skips).
 """
 
 from __future__ import annotations
@@ -84,10 +90,10 @@ def _warm(eng, mcfg, *, chunked, chunks, capacity, max_len):
 
 
 def bench_cell(params, mcfg, *, mode, chunked, capacity, prompt_len,
-               max_new, max_len, chunks, seed):
+               max_new, max_len, chunks, seed, mesh=None):
     eng = ServingEngine(params, mcfg, capacity=capacity, max_len=max_len,
                         quant=_quant(mode), seed=seed, chunked=chunked,
-                        prefill_chunks=chunks)
+                        prefill_chunks=chunks, mesh=mesh)
     # Warm prompts are capped at max_len - 2 (admission guard); the cap
     # selects the same bucket as the largest admissible timed prompt, so
     # every reachable bucket still gets warmed.
@@ -151,6 +157,64 @@ def bench_open_loop(params, mcfg, *, mode, load, capacity, prompt_len,
             "max_queue_depth": s["queue_depth"]["max"]}
 
 
+# ---------------------------------------------------------------------------
+# Per-mesh-shape sweep: sharded serving throughput at forced CPU meshes
+# ---------------------------------------------------------------------------
+
+MESH_SHAPES = ((1, 1), (2, 1), (1, 2), (2, 4))
+
+
+def mesh_one(args) -> None:
+    """Child-process entry (--mesh-one dp,tp): one closed-loop cell per mode
+    on that mesh, rows printed as ``MESH_ROW <json>`` for the parent.  The
+    parent forces dp*tp placeholder CPU devices via XLA_FLAGS before spawn
+    (the flag must be set before first jax use, hence the subprocess)."""
+    dp, tp = (int(v) for v in args.mesh_one.split(","))
+    mesh = jax.make_mesh((dp, tp), ("data", "model"))
+    mcfg = smoke_config(args.arch)
+    params = init_params(jax.random.PRNGKey(args.seed), mcfg)
+    chunks = tuple(int(c) for c in args.chunks.split(","))
+    for mode in args.modes.split(","):
+        row = bench_cell(params, mcfg, mode=mode, chunked=True,
+                         capacity=args.capacity, prompt_len=args.prompt_len,
+                         max_new=args.max_new, max_len=args.max_len,
+                         chunks=chunks, seed=args.seed, mesh=mesh)
+        row["mesh"] = [dp, tp]
+        print("MESH_ROW " + json.dumps(row), flush=True)
+
+
+def mesh_sweep(args) -> list:
+    """Spawn one subprocess per mesh shape (XLA device-count forcing is a
+    process-level, first-jax-use flag) and collect the MESH_ROW lines."""
+    import os
+    import subprocess
+
+    rows = []
+    for dp, tp in MESH_SHAPES:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={dp * tp}").strip()
+        cmd = [sys.executable, __file__, "--mesh-one", f"{dp},{tp}",
+               "--arch", args.arch, "--modes", "float,abfp-packed",
+               "--capacity", "4", "--prompt-len", "8", "--max-new", "4",
+               "--max-len", "32", "--chunks", "4,8",
+               "--seed", str(args.seed)]
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=1200)
+        got = [json.loads(ln.split(" ", 1)[1])
+               for ln in r.stdout.splitlines() if ln.startswith("MESH_ROW ")]
+        if r.returncode != 0 or not got:
+            print(f"  mesh ({dp},{tp}): FAILED\n{r.stdout}{r.stderr}")
+            raise SystemExit(1)
+        for row in got:
+            print(f"  mesh ({dp},{tp}) {row['mode']:12s} "
+                  f"tok/s {row['tok_per_s']:8.1f}  ttft {row['ttft_s']:.3f}s "
+                  f"ticks {row['ticks']}")
+        rows += got
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -174,7 +238,18 @@ def main() -> None:
                     help="tiny shapes, float only; gates on the chunked "
                          "path not being slower than prefill-in-decode and "
                          "writes a machine-readable pass/fail JSON")
+    ap.add_argument("--mesh-one", default=None,
+                    help="internal (child of the mesh sweep): run one "
+                         "closed-loop cell per mode on a dp,tp mesh and "
+                         "print MESH_ROW json lines")
+    ap.add_argument("--no-mesh-sweep", action="store_true",
+                    help="skip the per-mesh-shape sharded-serving sweep "
+                         "(full runs only; --smoke never sweeps)")
     args = ap.parse_args()
+
+    if args.mesh_one:
+        mesh_one(args)
+        return
 
     if args.smoke:
         args.prompt_len, args.capacity, args.max_new = 48, 2, 2
@@ -220,6 +295,12 @@ def main() -> None:
                   f"(slo {row['slo_ttft_s']:.3f}s)  "
                   f"qdepth<= {row['max_queue_depth']}")
 
+    mesh_rows = []
+    if not args.smoke and not args.no_mesh_sweep:
+        print("[bench_serving] per-mesh-shape sweep (forced CPU devices, "
+              "subprocess per shape)")
+        mesh_rows = mesh_sweep(args)
+
     gate_ok = (speedups.get("float", 1.0) >= 1.0)
     result = {
         "benchmark": "serving_smoke" if args.smoke else "serving_ttft",
@@ -229,6 +310,7 @@ def main() -> None:
         "backend": jax.default_backend(),
         "rows": rows, "speedup_ttft": speedups,
         "open_loop": open_rows,
+        "mesh_sweep": mesh_rows,
     }
     if args.smoke:
         # Machine-readable gate verdict: CI uploads this artifact, so the

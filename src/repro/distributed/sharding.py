@@ -30,10 +30,13 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core.abfp import PackedWeight
+
 Pytree = Any
 
 MODEL_AXIS = "model"
 DATA_AXES = ("pod", "data")      # 'pod' present only on the multi-pod mesh
+_LANE = 128                      # PackedWeight column alignment (core.abfp)
 
 
 def _data_axes(mesh: Mesh):
@@ -147,20 +150,41 @@ def _is_stacked(names: tuple) -> bool:
     return ("groups" in names) or ("layers" in names)
 
 
+def _leaf_base_spec(names: tuple, ndim: int) -> P:
+    """Rule-matched, rank-adjusted spec for one leaf (unvalidated)."""
+    spec = _match(names)
+    if spec is None:
+        return P(*([None] * ndim))                  # norms, biases, scalars
+    if _is_stacked(names):
+        spec = P(None, *spec)                       # leading scan axis
+    if len(spec) != ndim:
+        # rank mismatch (e.g. lam under stacking) — pad/trim safely
+        parts = tuple(spec) + (None,) * max(0, ndim - len(spec))
+        spec = P(*parts[:ndim])
+    return spec
+
+
+def _leaf_demote_k(names: tuple, ndim: int, spec: P) -> P:
+    """Drop MODEL sharding from a weight's contraction (K) axis — ABFP
+    tiles of width n must not straddle shards and the tile scan axis must
+    not be sharded (see ``abfp_param_spec_tree``)."""
+    parts = list(spec)
+    if not parts:
+        return spec
+    # Stacked leaves: axis 0 is the scan axis; K is the first non-stack
+    # axis for 2-D weights (rank>=2 after stacking).
+    k_axis = 1 if _is_stacked(names) else 0
+    if ndim >= 2 and len(parts) > k_axis and parts[k_axis] == MODEL_AXIS:
+        parts[k_axis] = None
+    # MoE expert axis (axis 0/1) is not a contraction — keep EP sharding.
+    return P(*parts)
+
+
 def param_spec_tree(params: Pytree, mesh: Optional[Mesh] = None) -> Pytree:
     """PartitionSpec pytree mirroring ``params`` (validated when mesh given)."""
 
     def one(path, leaf):
-        names = _path_names(path)
-        spec = _match(names)
-        if spec is None:
-            return P(*([None] * leaf.ndim))         # norms, biases, scalars
-        if _is_stacked(names):
-            spec = P(None, *spec)                   # leading scan axis
-        if len(spec) != leaf.ndim:
-            # rank mismatch (e.g. lam under stacking) — pad/trim safely
-            parts = tuple(spec) + (None,) * max(0, leaf.ndim - len(spec))
-            spec = P(*parts[: leaf.ndim])
+        spec = _leaf_base_spec(_path_names(path), leaf.ndim)
         if mesh is not None:
             spec = validate_spec(spec, leaf.shape, mesh)
         return spec
@@ -188,24 +212,116 @@ def abfp_param_spec_tree(params: Pytree, mesh: Optional[Mesh] = None) -> Pytree:
     features over 'model') is always safe; row-parallel specs (K over
     'model') are demoted to replicated.  See EXPERIMENTS.md §Dry-run.
     """
-    specs = param_spec_tree(params, mesh)
-
-    def demote(path, leaf, spec):
-        parts = list(spec)
-        if not parts:
-            return spec
-        # Stacked leaves: axis 0 is the scan axis; K is the first non-stack
-        # axis for 2-D weights (rank>=2 after stacking).
+    def one(path, leaf):
         names = _path_names(path)
-        stacked = _is_stacked(names)
-        k_axis = 1 if stacked else 0
-        if leaf.ndim >= 2 and len(parts) > k_axis and parts[k_axis] == MODEL_AXIS:
-            parts[k_axis] = None
-        # MoE expert axis (axis 0/1) is not a contraction — keep EP sharding.
-        return P(*parts)
+        spec = _leaf_demote_k(names, leaf.ndim,
+                              _leaf_base_spec(names, leaf.ndim))
+        if mesh is not None:
+            spec = validate_spec(spec, leaf.shape, mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Serving placement: packed/float param trees + decode state, mesh-aware
+# ---------------------------------------------------------------------------
+
+
+def serving_param_spec_tree(params: Pytree, mesh: Mesh,
+                            quant: Any = None) -> Pytree:
+    """Column-parallel-only specs for a serving param tree (float or packed).
+
+    Float leaves follow the ABFP rules (output features over 'model',
+    K-sharding demoted): exactly the axes ``kernels.ops.dense_tp`` splits.
+    ``PackedWeight`` leaves shard their int8 codes AND bf16 scales together
+    along the output-column axis — the per-(tile, col) scales always travel
+    with their codes.  Shard-or-replicate is decided by the SAME predicate
+    the dispatch uses (``kernels.ops.tp_col_quantum``, given ``quant``), so
+    a weight is stored sharded exactly when the matmul consumes it sharded
+    — no per-call resharding either way.  Without ``quant`` the
+    conservative noise-safe quantum (whole 128-lane blocks per shard)
+    applies to kernel-mode weights.
+    """
+    from repro.kernels.ops import tp_col_quantum
+
+    tp = mesh.shape[MODEL_AXIS] if MODEL_AXIS in mesh.axis_names else 1
+
+    def col_quantum(packed: bool) -> Optional[int]:
+        if quant is not None:
+            return tp_col_quantum(quant, packed, tp)
+        return tp * _LANE if packed else tp     # noise-safe default
+
+    def one(path, leaf):
+        if isinstance(leaf, PackedWeight):
+            lead = leaf.ndim - 2
+            q = col_quantum(True)
+            col = (MODEL_AXIS
+                   if tp > 1 and q is not None and leaf.n_padded % q == 0
+                   else None)
+            cs = P(*((None,) * (lead + 1)), col)
+            # A PackedWeight of specs: flattens to (codes_spec, scales_spec)
+            # with the SAME aux as the param leaf, so jax.device_put can zip
+            # the two trees leaf-for-leaf.
+            return PackedWeight(cs, cs, leaf.k, leaf.n_cols,
+                                leaf.tile_width, leaf.bits_w)
+        names = _path_names(path)
+        spec = _leaf_demote_k(names, leaf.ndim,
+                              _leaf_base_spec(names, leaf.ndim))
+        spec = validate_spec(spec, leaf.shape, mesh)
+        parts = tuple(spec) + (None,) * (leaf.ndim - len(spec))
+        if parts and parts[-1] == MODEL_AXIS:
+            q = col_quantum(False)
+            if q is None or leaf.shape[-1] % q != 0:
+                spec = P(*parts[:-1], None)
+        return spec
 
     return jax.tree_util.tree_map_with_path(
-        lambda path, leaf, spec: demote(path, leaf, spec), params, specs)
+        one, params, is_leaf=lambda x: isinstance(x, PackedWeight))
+
+
+def shard_serving_params(params: Pytree, mesh: Mesh,
+                         quant: Any = None) -> Pytree:
+    """Place a serving param tree (float and/or packed leaves) on ``mesh``."""
+    specs = serving_param_spec_tree(params, mesh, quant)
+    return jax.device_put(
+        params,
+        jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                     is_leaf=lambda x: isinstance(x, P)))
+
+
+def serving_state_spec_tree(state: Pytree, mesh: Mesh) -> Pytree:
+    """Decode-state specs for SERVING: slot/batch axis over the data axes,
+    everything else replicated.
+
+    Unlike ``decode_state_spec_tree`` (training-eval oriented), no state
+    axis is put on 'model': serving activations are replicated across the
+    model axis between column-parallel matmuls (``kernels.ops.dense_tp``
+    all-gathers), and model-sharding KV heads would make attention
+    contractions cross shards — trading the bit-identical-at-any-mesh-shape
+    property for memory serving does not need at these capacities."""
+    dp = _data_axes(mesh)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        stacked = "groups" in names
+        nd = leaf.ndim - (1 if stacked else 0)
+        if nd <= 0:
+            return P(*([None] * leaf.ndim))
+        core = (dp,) + (None,) * (nd - 1)
+        if stacked:
+            core = (None,) + core
+        return validate_spec(P(*core), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, state)
+
+
+def shard_decode_state(state: Pytree, mesh: Mesh) -> Pytree:
+    """Place an ``init_decode_state`` tree on ``mesh`` for serving."""
+    specs = serving_state_spec_tree(state, mesh)
+    return jax.device_put(
+        state, jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P)))
 
 
 # ---------------------------------------------------------------------------

@@ -135,7 +135,8 @@ def _hash_uniform(shape, seed, salt):
 # ---------------------------------------------------------------------------
 
 
-def _abfp_contrib(xt, wq, sw, seed_ref, cfg: QuantConfig, tk: int, n: int):
+def _abfp_contrib(xt, wq, sw, seed_ref, cfg: QuantConfig, tk: int, n: int,
+                  nj: Optional[int] = None):
     """Shared per-grid-step ABFP math: everything except how (wq, sw) were
     obtained.  BOTH kernels route through this one function so the
     packed == unpacked bit-identity contract lives in exactly one place.
@@ -144,6 +145,14 @@ def _abfp_contrib(xt, wq, sw, seed_ref, cfg: QuantConfig, tk: int, n: int):
     codes, already cast to the MXU code dtype;  sw: (tk, bn) f32 weight
     scales (``scale_dtype``-rounded).  Returns the (bm, bn) f32 contribution
     of this K block.
+
+    ``seed_ref`` is SMEM (2,) int32: [noise seed, column-block offset].  The
+    offset (plus ``nj``, the GLOBAL column-block count) globalizes the noise
+    salt for tensor-parallel column shards: shard s computing column blocks
+    [off, off + nj_local) draws exactly the noise the single-device grid
+    draws for those blocks, so sharded execution is bit-identical to
+    unsharded at any shard count (kernels/ops.dense_tp).  Defaults (offset
+    0, nj = num_programs(1)) reproduce the historical single-device salts.
     """
     bm = xt.shape[0]
     bn = wq.shape[-1]
@@ -176,9 +185,10 @@ def _abfp_contrib(xt, wq, sw, seed_ref, cfg: QuantConfig, tk: int, n: int):
         # One independent uniform noise draw per partial output, in LSB
         # units, salted by the grid position.
         i = pl.program_id(0)
-        j = pl.program_id(1)
+        j = pl.program_id(1) + seed_ref[1]          # global column block
         k = pl.program_id(2)
-        salt = (i * pl.num_programs(1) + j) * pl.num_programs(2) + k
+        nj_g = nj if nj is not None else pl.num_programs(1)
+        salt = (i * nj_g + j) * pl.num_programs(2) + k
         u = _hash_uniform(
             (tk * bm, bn),
             seed_ref[0],
@@ -195,7 +205,7 @@ def _abfp_contrib(xt, wq, sw, seed_ref, cfg: QuantConfig, tk: int, n: int):
 
 
 def _abfp_matmul_kernel(
-    seed_ref,  # SMEM (1,) int32
+    seed_ref,  # SMEM (2,) int32: [seed, col-block offset]
     x_ref,     # VMEM (bm, bk)
     w_ref,     # VMEM (bk, bn)
     o_ref,     # VMEM (bm, bn)
@@ -204,6 +214,7 @@ def _abfp_matmul_kernel(
     cfg: QuantConfig,
     tk: int,
     n: int,
+    nj: Optional[int] = None,
 ):
     k = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -230,7 +241,7 @@ def _abfp_matmul_kernel(
     from repro.core.abfp import code_dtype
     wq = wq.astype(code_dtype(max(cfg.bits_x, cfg.bits_w)))
 
-    acc_ref[...] += _abfp_contrib(xt, wq, sw, seed_ref, cfg, tk, n)
+    acc_ref[...] += _abfp_contrib(xt, wq, sw, seed_ref, cfg, tk, n, nj=nj)
 
     @pl.when(k == nk - 1)
     def _done():
@@ -246,8 +257,21 @@ def _ceil_to(v: int, m: int) -> int:
     return ((v + m - 1) // m) * m
 
 
+def _seed_smem(seed, noise_lsb: float, col_block_offset) -> jax.Array:
+    """(2,) int32 SMEM payload: [noise seed, global column-block offset]."""
+    if seed is None:
+        if noise_lsb > 0.0:
+            raise ValueError("noise_lsb > 0 requires a seed")
+        seed = jnp.zeros((), jnp.int32)
+    seed = jnp.asarray(seed, jnp.int32).reshape(())
+    off = (jnp.zeros((), jnp.int32) if col_block_offset is None
+           else jnp.asarray(col_block_offset, jnp.int32).reshape(()))
+    return jnp.stack([seed, off])
+
+
 @functools.partial(
-    jax.jit, static_argnames=("cfg", "bm", "bn", "bk", "interpret")
+    jax.jit,
+    static_argnames=("cfg", "bm", "bn", "bk", "interpret", "num_col_blocks"),
 )
 def abfp_matmul_pallas(
     x: jax.Array,
@@ -259,6 +283,8 @@ def abfp_matmul_pallas(
     bn: int = DEFAULT_BN,
     bk: Optional[int] = None,
     interpret: Optional[bool] = None,
+    col_block_offset: Optional[jax.Array] = None,
+    num_col_blocks: Optional[int] = None,
 ) -> jax.Array:
     """y = ABFP(x @ w); x: (..., K), w: (K, N) -> (..., N) in cfg.out_dtype.
 
@@ -266,6 +292,12 @@ def abfp_matmul_pallas(
     cfg.noise_lsb > 0).  ``interpret`` defaults to True off-TPU so the same
     call validates on CPU and runs compiled on TPU.  ``bm`` defaults to the
     decode-aware ``auto_bm`` (8-row blocks for 1–8 row decode matmuls).
+
+    ``col_block_offset`` (runtime int32) and ``num_col_blocks`` (static):
+    tensor-parallel salt globalization — a column shard owning blocks
+    [off, off + N_local/bn) of a global grid with ``num_col_blocks`` column
+    blocks draws the same noise the single-device grid draws for those
+    blocks (see ``_abfp_contrib``).  Leave unset for single-device calls.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -285,17 +317,13 @@ def abfp_matmul_pallas(
     x2 = jnp.pad(x2, ((0, mp - m_dim), (0, kp - k_dim)))
     wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k_dim), (0, np_ - n_dim)))
 
-    if seed is None:
-        if cfg.noise_lsb > 0.0:
-            raise ValueError("noise_lsb > 0 requires a seed")
-        seed = jnp.zeros((1,), jnp.int32)
-    else:
-        seed = jnp.asarray(seed, jnp.int32).reshape((1,))
+    seed = _seed_smem(seed, cfg.noise_lsb, col_block_offset)
 
     grid = (mp // bm, np_ // bn, kp // bk)
     tk = bk // n
 
-    kernel = functools.partial(_abfp_matmul_kernel, cfg=cfg, tk=tk, n=n)
+    kernel = functools.partial(_abfp_matmul_kernel, cfg=cfg, tk=tk, n=n,
+                               nj=num_col_blocks)
     out = pl.pallas_call(
         kernel,
         grid=grid,
@@ -322,7 +350,7 @@ def abfp_matmul_pallas(
 
 
 def _abfp_matmul_packed_kernel(
-    seed_ref,  # SMEM (1,) int32
+    seed_ref,  # SMEM (2,) int32: [seed, col-block offset]
     x_ref,     # VMEM (bm, bk) f32
     wc_ref,    # VMEM (bk, bn) int8 weight codes
     sw_ref,    # VMEM (tk, bn) scale_dtype weight scales
@@ -332,6 +360,7 @@ def _abfp_matmul_packed_kernel(
     cfg: QuantConfig,
     tk: int,
     n: int,
+    nj: Optional[int] = None,
 ):
     k = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -352,7 +381,7 @@ def _abfp_matmul_packed_kernel(
     wq = wc_ref[...].astype(cdt).reshape(tk, n, bn)  # (tk, n, bn)
     sw = sw_ref[...].astype(jnp.float32)             # (tk, bn)
 
-    acc_ref[...] += _abfp_contrib(xt, wq, sw, seed_ref, cfg, tk, n)
+    acc_ref[...] += _abfp_contrib(xt, wq, sw, seed_ref, cfg, tk, n, nj=nj)
 
     @pl.when(k == nk - 1)
     def _done():
@@ -360,7 +389,8 @@ def _abfp_matmul_packed_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cfg", "bm", "bn", "bk", "interpret")
+    jax.jit,
+    static_argnames=("cfg", "bm", "bn", "bk", "interpret", "num_col_blocks"),
 )
 def abfp_matmul_packed_pallas(
     x: jax.Array,
@@ -372,6 +402,8 @@ def abfp_matmul_packed_pallas(
     bn: int = DEFAULT_BN,
     bk: Optional[int] = None,
     interpret: Optional[bool] = None,
+    col_block_offset: Optional[jax.Array] = None,
+    num_col_blocks: Optional[int] = None,
 ) -> jax.Array:
     """y = ABFP(x @ w) from a pre-packed weight; x: (..., K) -> (..., N).
 
@@ -379,6 +411,9 @@ def abfp_matmul_packed_pallas(
     this ``cfg``'s tile width / bits_w.  Bit-identical to
     ``abfp_matmul_pallas(x, w, cfg, seed)`` at matching block sizes,
     without re-deriving weight scales/codes on every grid step.
+
+    ``col_block_offset`` / ``num_col_blocks``: tensor-parallel noise-salt
+    globalization, as in ``abfp_matmul_pallas``.
     """
     if pw.codes.ndim != 2:
         raise ValueError(
@@ -429,18 +464,13 @@ def abfp_matmul_packed_pallas(
         wc = jnp.pad(wc, ((0, kp - kp0), (0, np_ - npad0)))
         sw = jnp.pad(sw, ((0, (kp - kp0) // n), (0, np_ - npad0)))
 
-    if seed is None:
-        if cfg.noise_lsb > 0.0:
-            raise ValueError("noise_lsb > 0 requires a seed")
-        seed = jnp.zeros((1,), jnp.int32)
-    else:
-        seed = jnp.asarray(seed, jnp.int32).reshape((1,))
+    seed = _seed_smem(seed, cfg.noise_lsb, col_block_offset)
 
     grid = (mp // bm, np_ // bn, kp // bk)
     tk = bk // n
 
     kernel = functools.partial(
-        _abfp_matmul_packed_kernel, cfg=cfg, tk=tk, n=n)
+        _abfp_matmul_packed_kernel, cfg=cfg, tk=tk, n=n, nj=num_col_blocks)
     out = pl.pallas_call(
         kernel,
         grid=grid,

@@ -121,3 +121,187 @@ def _dense_packed_bwd(cfg, res, g):
 
 
 dense_packed.defvjp(_dense_packed_fwd, _dense_packed_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel dispatch: shard_map over the 'model' mesh axis
+# ---------------------------------------------------------------------------
+#
+# Serving shards every dense matmul COLUMN-parallel (output features over
+# 'model'): each shard runs the kernel on its slice of the weight columns
+# and the results are all-gathered.  Column splits never break ABFP K-tiles
+# (tiles live along the contracting dim), every output element's f32
+# contraction is computed exactly as on one device, and the Pallas noise
+# salts are globalized via ``col_block_offset``/``num_col_blocks`` — so
+# column-parallel execution is BIT-IDENTICAL to single-device at any shard
+# count, which is what makes sharded serving testable against the
+# single-device engine (tests/test_sharded_serving.py).
+#
+# ``dense_tp_row`` is the complementary ROW-parallel (contracting-dim)
+# form: x columns and weight rows sharded, partial products combined with a
+# psum over 'model'.  The psum changes f32 accumulation order, so it is
+# reproducible but NOT bit-identical to single-device — serving therefore
+# never routes through it (the ABFP spec rules demote K-sharding anyway:
+# distributed.sharding.abfp_param_spec_tree); it exists for float-mode
+# training shards.
+#
+# Both wrappers are forward-only (the serving engine never differentiates);
+# QAT keeps using ``dense``/``dense_packed``.
+
+_MODEL_AXIS = "model"       # mirrors distributed.sharding.MODEL_AXIS
+_DATA_AXES = ("pod", "data")
+_LANE = 128                 # packed-weight lane alignment (core.abfp)
+
+
+def tp_size(mesh) -> int:
+    """Size of the 'model' axis of ``mesh`` (1 when absent / no mesh)."""
+    if mesh is None or _MODEL_AXIS not in mesh.axis_names:
+        return 1
+    return mesh.shape[_MODEL_AXIS]
+
+
+def tp_col_quantum(cfg: QuantConfig, packed: bool, tp: int) -> Optional[int]:
+    """Column-count divisor a weight needs for column-sharding over ``tp``
+    shards, or None when the mode can never shard.
+
+    THE single source of the shardability rule — placement
+    (``distributed.sharding.serving_param_spec_tree``) and dispatch
+    (``tp_shardable``) both consult it, so a weight is stored sharded
+    exactly when the matmul will consume it sharded:
+
+    * float weights: any even column split (``tp``);
+    * kernel modes with noise: every local slice must be a whole number of
+      128-lane column blocks (``tp * 128``), so local Pallas grids tile
+      exactly like the global grid and the globalized salts line up;
+    * kernel modes without noise: any even split — per-column values are
+      block-layout independent;
+    * the pure-jnp scan path (``abfp_ref``) draws noise with
+      shape-dependent ``jax.random`` streams that cannot be
+      column-globalized — never sharded.
+    """
+    if packed or cfg.mode in ("abfp_kernel", "abfp_packed"):
+        return tp * _LANE if cfg.noise_lsb > 0.0 else tp
+    if cfg.mode == "float":
+        return tp
+    return None     # abfp_ref
+
+
+def tp_shardable(w, cfg: QuantConfig, mesh) -> bool:
+    """Can ``w`` be column-sharded over 'model' with bit-identical results?
+    Only 2-D weights qualify (leading batch axes are indexed/scanned
+    first); the column rule lives in ``tp_col_quantum``."""
+    tp = tp_size(mesh)
+    if tp <= 1 or getattr(w, "ndim", 0) != 2:
+        return False
+    packed = isinstance(w, PackedWeight)
+    quantum = tp_col_quantum(cfg, packed, tp)
+    if quantum is None:
+        return False
+    cols = w.n_padded if packed else w.shape[-1]
+    return cols % quantum == 0
+
+
+def dense_tp(x: jax.Array, w, cfg: QuantConfig,
+             key: Optional[jax.Array] = None, mesh=None) -> jax.Array:
+    """Column-parallel ``dense``/``dense_packed`` over the 'model' axis.
+
+    Bit-identical to the single-device call (see module comment).  Falls
+    back to the single-device path when the weight is not shardable at this
+    mesh (indivisible columns, abfp_ref mode, stacked weights) — the
+    fallback runs replicated under GSPMD, still correct at any mesh shape.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if not tp_shardable(w, cfg, mesh):
+        if isinstance(w, PackedWeight):
+            return dense_packed(x, w, cfg, key)
+        return dense(x, w, cfg, key)
+
+    tp = tp_size(mesh)
+    seed = _key_to_seed(key)
+    packed = isinstance(w, PackedWeight)
+    mode = "packed" if packed else cfg.mode
+
+    # Activation batch axis: shard over the data axes when possible, so a
+    # dp > 1 mesh parallelizes rows instead of redundantly recomputing the
+    # full batch per data group.  Row splits are bit-identity-safe only
+    # while noise is OFF: the noise lattice indexes rows block-locally, so
+    # a batch split would re-seat rows and change their draws (columns are
+    # globalized via the salt offset; rows are not).  With noise on, x
+    # stays replicated — correctness over dp-throughput.
+    daxes = tuple(a for a in _DATA_AXES
+                  if mesh is not None and a in mesh.axis_names)
+    dp = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    batch_sharded = (cfg.noise_lsb == 0.0 and dp > 1 and x.ndim >= 2
+                     and x.shape[0] % dp == 0)
+    rep_x = (P(daxes, *([None] * (x.ndim - 1))) if batch_sharded
+             else P(*([None] * x.ndim)))
+
+    if mode == "packed":
+        cols, n_cols = w.n_padded, w.n_cols
+        nj_global, local_blocks = cols // _LANE, cols // tp // _LANE
+    elif mode != "float":
+        cols = n_cols = w.shape[-1]
+        nj_global, local_blocks = cols // _LANE, cols // tp // _LANE
+
+    def gather(y):
+        return jax.lax.all_gather(y, _MODEL_AXIS, axis=-1, tiled=True)
+
+    def offset():
+        return jax.lax.axis_index(_MODEL_AXIS) * local_blocks
+
+    if mode == "float":
+        def body(x_, w_):
+            return gather(jnp.matmul(x_, w_.astype(x_.dtype)))
+        args, specs = (x, w), (rep_x, P(None, _MODEL_AXIS))
+    elif mode == "packed":
+        def body(x_, codes, scales, *s):
+            pw_l = PackedWeight(codes, scales, w.k, codes.shape[-1],
+                                w.tile_width, w.bits_w)
+            return gather(abfp_matmul_packed_pallas(
+                x_, pw_l, cfg, s[0] if s else None,
+                col_block_offset=offset(), num_col_blocks=nj_global))
+        args = (x, w.codes, w.scales) + (() if seed is None else (seed,))
+        specs = (rep_x, P(None, _MODEL_AXIS), P(None, _MODEL_AXIS)) \
+            + (() if seed is None else (P(),))
+    else:   # abfp_kernel
+        def body(x_, w_, *s):
+            return gather(abfp_matmul_pallas(
+                x_, w_, cfg, s[0] if s else None,
+                col_block_offset=offset(), num_col_blocks=nj_global))
+        args = (x, w) + (() if seed is None else (seed,))
+        specs = (rep_x, P(None, _MODEL_AXIS)) \
+            + (() if seed is None else (P(),))
+
+    out = shard_map(body, mesh=mesh, in_specs=specs,
+                    out_specs=rep_x, check_rep=False)(*args)
+    return out[..., :n_cols] if mode == "packed" else out
+
+
+def dense_tp_row(x: jax.Array, w: jax.Array, cfg: QuantConfig,
+                 mesh=None) -> jax.Array:
+    """Row-parallel float matmul: contracting dim sharded over 'model',
+    partials combined with a psum.  Reproducible, but NOT bit-identical to
+    single-device (psum reorders the f32 reduction) — float mode only."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if cfg.mode != "float":
+        raise ValueError(
+            "dense_tp_row is float-only: sharding the contracting dim "
+            "splits ABFP tile accumulation across devices, breaking the "
+            "per-tile ADC semantics (use column-parallel dense_tp)")
+    tp = tp_size(mesh)
+    if tp <= 1 or w.shape[0] % tp != 0:
+        return dense(x, w, cfg, None)
+
+    x_spec = P(*([None] * (x.ndim - 1) + [_MODEL_AXIS]))
+
+    def body(x_, w_):
+        return jax.lax.psum(jnp.matmul(x_, w_.astype(x_.dtype)), _MODEL_AXIS)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(x_spec, P(_MODEL_AXIS, None)),
+                     out_specs=P(*([None] * x.ndim)),
+                     check_rep=False)(x, w)

@@ -21,14 +21,27 @@ Open-loop runs print p50/p99 TTFT, TPOT, and E2E in simulated ticks (one
 tick = one jitted pass) plus goodput against ``--slo-ttft``;
 ``--metrics-out`` dumps the full percentile summary as JSON
 (see ``repro.serving.metrics``).
+
+Sharded serving: ``--mesh dp,tp`` builds a (data, model) device mesh and
+runs the engine tensor-parallel (column-parallel weights over 'model',
+slot state over 'data').  When the host exposes fewer than dp*tp devices
+the driver forces placeholder CPU devices via
+``--xla_force_host_platform_device_count`` BEFORE first jax use, so the
+whole path runs on CPU CI:
+
+    PYTHONPATH=src python -m repro.launch.serve --mesh 2,4 --quant abfp-packed
+
+Greedy decode under any mesh shape emits bit-identical tokens to the
+single-device engine for the same seed (tests/test_sharded_serving.py).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
-from typing import List
+from typing import List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -37,6 +50,31 @@ from repro.configs import get_config, smoke_config
 from repro.core.abfp import QuantConfig
 from repro.models import init_params, param_count
 from repro.serving import Request, ServingEngine
+
+
+def parse_mesh(arg: Optional[str]) -> Optional[Tuple[int, int]]:
+    """'dp,tp' -> (dp, tp); None passes through (single-device engine)."""
+    if arg is None:
+        return None
+    try:
+        dp, tp = (int(v) for v in arg.split(","))
+    except ValueError:
+        raise SystemExit(f"--mesh expects 'dp,tp' (got {arg!r})")
+    if dp < 1 or tp < 1:
+        raise SystemExit(f"--mesh axes must be >= 1 (got {arg!r})")
+    return dp, tp
+
+
+def force_host_devices(n: int) -> None:
+    """Ensure >= n CPU devices exist, forcing placeholders if needed.
+
+    Must run BEFORE anything initializes the jax backend: XLA reads
+    ``--xla_force_host_platform_device_count`` exactly once, at first use.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
 
 
 def poisson_workload(mcfg, args, rng: np.random.Generator) -> List[Request]:
@@ -120,7 +158,23 @@ def main() -> None:
                     help="TTFT SLO in simulated ticks (goodput threshold)")
     ap.add_argument("--metrics-out", default=None,
                     help="write the percentile metrics summary JSON here")
+    ap.add_argument("--mesh", default=None,
+                    help="dp,tp — serve tensor-parallel on a (data, model) "
+                         "mesh; placeholder CPU devices are forced when the "
+                         "host has fewer than dp*tp (CPU-CI friendly)")
     args = ap.parse_args()
+
+    mesh_shape = parse_mesh(args.mesh)
+    mesh = None
+    if mesh_shape is not None:
+        force_host_devices(mesh_shape[0] * mesh_shape[1])
+        if len(jax.devices()) < mesh_shape[0] * mesh_shape[1]:
+            raise SystemExit(
+                f"--mesh {args.mesh}: needs {mesh_shape[0] * mesh_shape[1]} "
+                f"devices but jax was already initialized with "
+                f"{len(jax.devices())}; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count yourself")
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"))
 
     mcfg = smoke_config(args.arch) if args.reduced else get_config(args.arch)
     params = init_params(jax.random.PRNGKey(args.seed), mcfg)
@@ -131,14 +185,17 @@ def main() -> None:
                          gain=args.gain, noise_lsb=0.5)
              if mode != "float" else QuantConfig(mode="float"))
 
+    mesh_note = (f", mesh=({mesh_shape[0]}x{mesh_shape[1]} data x model)"
+                 if mesh is not None else "")
     print(f"[serve] {args.arch}: {param_count(params)/1e6:.1f}M params, "
-          f"quant={args.quant}, policy={args.policy}")
+          f"quant={args.quant}, policy={args.policy}{mesh_note}")
     eng = ServingEngine(params, mcfg, capacity=args.capacity,
                         max_len=args.max_len, quant=quant, seed=args.seed,
                         chunked=not args.no_chunked,
                         policy=args.policy,
                         prefill_chunks=tuple(
-                            int(c) for c in args.prefill_chunks.split(",")))
+                            int(c) for c in args.prefill_chunks.split(",")),
+                        mesh=mesh)
     rng = np.random.default_rng(args.seed)
 
     open_loop = args.arrival_rate is not None or args.trace is not None

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.core.abfp import PackedWeight, QuantConfig
 from repro.kernels.ops import dense as quant_dense
-from repro.kernels.ops import dense_packed
+from repro.kernels.ops import dense_packed, dense_tp, tp_size
 
 Array = jax.Array
 
@@ -33,16 +33,25 @@ class Numerics:
     Each ``dense`` call site gets a deterministic PRNG stream derived from
     (base key, call counter); the caller folds the layer index into the base
     key inside scan-over-layers, so streams are unique per (layer, call).
+
+    ``mesh``: when given (sharded serving), every 2-D dense weight is
+    dispatched column-parallel over the mesh's 'model' axis via
+    ``kernels.ops.dense_tp`` — bit-identical to the single-device path at
+    any mesh shape (noise salts are globalized per column shard).  Weights
+    the mesh cannot split evenly fall back to replicated execution inside
+    the same dispatch.
     """
 
-    def __init__(self, quant: QuantConfig, key: Optional[Array] = None):
+    def __init__(self, quant: QuantConfig, key: Optional[Array] = None,
+                 mesh=None):
         self.quant = quant
         self._key = key
+        self.mesh = mesh
         self._count = 0
 
     def fold(self, idx) -> "Numerics":
         key = None if self._key is None else jax.random.fold_in(self._key, idx)
-        return Numerics(self.quant, key)
+        return Numerics(self.quant, key, self.mesh)
 
     def dense(self, x: Array, w) -> Array:
         key = None
@@ -50,6 +59,10 @@ class Numerics:
                 and self.quant.mode != "float":
             key = jax.random.fold_in(self._key, self._count)
         self._count += 1
+        if self.mesh is not None and tp_size(self.mesh) > 1:
+            # Sharded serving: column-parallel tensor parallelism (with
+            # replicated fallback for unsplittable weights) in one dispatch.
+            return dense_tp(x, w, self.quant, key, self.mesh)
         if isinstance(w, PackedWeight):
             # Quantize-once serving path: the weight was packed at engine
             # init (pack_model_params); skip re-quantization entirely.
@@ -490,18 +503,19 @@ def chunk_append_attend(q: Array, k: Array, v: Array, kv_cache: dict,
     valid = offs < n_tokens[:, None]                        # (B, S)
     # Padding lanes collapse onto the slot just past the last real token
     # (the next position a later chunk/tick will overwrite) and write back
-    # the value already there — untouched slots stay bit-identical.  The
-    # clamp never collides with a real write as long as the caller keeps
-    # length + n_tokens < S_max (the engine reserves >= 1 decode slot).
+    # the value already there — untouched slots stay bit-identical.  When
+    # length + n_tokens == S_max that slot does not exist: those lanes go
+    # out of bounds and are DROPPED (scatter mode="drop") instead of being
+    # clamped onto index S_max - 1, where they would collide with the last
+    # real token's write and could silently win the duplicate-index race.
     idx = length[:, None] + jnp.minimum(offs, n_tokens[:, None])
-    idx = jnp.minimum(idx, s_max - 1)
     bidx = jnp.arange(b)[:, None]
 
     def scatter(buf, new_vals):
-        old = buf[bidx, idx]
+        old = buf[bidx, idx]        # OOB reads clamp; those lanes are dropped
         sel = valid.reshape(valid.shape + (1,) * (new_vals.ndim - 2))
         return buf.at[bidx, idx].set(
-            jnp.where(sel, new_vals.astype(buf.dtype), old))
+            jnp.where(sel, new_vals.astype(buf.dtype), old), mode="drop")
 
     q_pos = length[:, None] + offs                          # (B, S) global
     quantized = "k_scale" in kv_cache

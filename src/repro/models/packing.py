@@ -51,13 +51,20 @@ def _leaf_name(path) -> str:
 
 
 def pack_model_params(params: dict, cfg: QuantConfig,
-                      mcfg: Any = None) -> dict:
+                      mcfg: Any = None, mesh: Any = None) -> dict:
     """Return a copy of ``params`` with all dense weights pre-packed.
 
     ``cfg`` supplies the tile width / bit widths the weights are packed
     for; serving must then run with a config whose tile_width and bits_w
     match (the packed kernel validates this).  ``mcfg`` (optional
     ModelConfig) enables the tied-embeddings LM-head insertion.
+
+    ``mesh`` (optional ``jax.sharding.Mesh``): the sharded serving path —
+    the packed tree is placed per ``distributed.sharding
+    .serving_param_spec_tree``: each ``PackedWeight``'s int8 codes and bf16
+    scales are column-sharded TOGETHER over the 'model' axis (per-(tile,
+    col) scales travel with their codes), unsplittable weights and digital
+    leaves (norms, embed, routers) replicate.
     """
 
     def pack(path, leaf):
@@ -76,6 +83,9 @@ def pack_model_params(params: dict, cfg: QuantConfig,
         # The tied head multiplies by embed.T; pack that transpose once so
         # decode never touches the float embedding table for the head.
         packed["lm_head"] = pack_abfp_weight(params["embed"].T, cfg)
+    if mesh is not None:
+        from repro.distributed.sharding import shard_serving_params
+        packed = shard_serving_params(packed, mesh, cfg)
     return packed
 
 

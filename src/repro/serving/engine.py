@@ -67,6 +67,21 @@ Sampling: ``temperature == 0`` decodes greedily (argmax); ``temperature >
 0`` samples from the temperature-scaled softmax using a stream seeded by
 (engine seed, request uid, token index), so draws are reproducible for a
 given engine seed regardless of how requests interleave across ticks.
+
+Sharded serving
+---------------
+``mesh=`` (a ``jax.sharding.Mesh`` with a 'model' axis and optional
+'data'/'pod' axes) makes the whole stack mesh-aware: dense weights —
+including pre-packed int8 codes + bf16 scales, which shard TOGETHER —
+are placed column-parallel over 'model'
+(``distributed.sharding.serving_param_spec_tree``), slot state / KV
+caches shard over the data axes, and every matmul dispatches through
+``kernels.ops.dense_tp`` (shard_map + all-gather, noise salts
+globalized per column shard).  Column-parallel splitting never crosses
+an ABFP K-tile and never reorders an f32 contraction, so greedy decode
+is BIT-IDENTICAL to the single-device engine at any mesh shape, noise
+included — the open-loop submit/poll/drain API is unchanged
+(tests/test_sharded_serving.py).
 """
 
 from __future__ import annotations
@@ -111,13 +126,20 @@ class ServingEngine:
                  chunked: bool = True,
                  policy: Union[str, Scheduler] = "fcfs",
                  tick_time: float = 1.0,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 mesh=None):
+        self.mesh = mesh
         if quant.mode == "abfp_packed":
             # Quantize-once: pack every dense weight at admission time so
             # the per-tick decode path only streams int8 codes + bf16
-            # scales (the paper's program-the-array-once deployment).
+            # scales (the paper's program-the-array-once deployment).  With
+            # a mesh, codes + scales are column-sharded together over the
+            # 'model' axis as part of the same one-time step.
             from repro.models.packing import pack_model_params
-            params = pack_model_params(params, quant, mcfg)
+            params = pack_model_params(params, quant, mcfg, mesh=mesh)
+        elif mesh is not None:
+            from repro.distributed.sharding import shard_serving_params
+            params = shard_serving_params(params, mesh, quant)
         self.params = params
         self.mcfg = mcfg
         self.capacity = capacity
@@ -126,6 +148,13 @@ class ServingEngine:
         self.seed = seed
         self.key = jax.random.PRNGKey(seed)
         self.state = init_decode_state(mcfg, capacity, max_len)
+        if mesh is not None:
+            # Slot state / KV caches shard over the data axes (slot = batch
+            # row); everything stays replicated over 'model' so the
+            # column-parallel matmul dispatch keeps results bit-identical
+            # to single-device at any mesh shape.
+            from repro.distributed.sharding import shard_decode_state
+            self.state = shard_decode_state(self.state, mesh)
         self.slots: List[Optional[Request]] = [None] * capacity
         self._next_input = np.zeros((capacity,), np.int32)
         self.ticks = 0
@@ -139,13 +168,13 @@ class ServingEngine:
         self._just_finished: List[Request] = []
 
         def _step(params, state, token, key):
-            nx = Numerics(quant, key)
+            nx = Numerics(quant, key, mesh=mesh)
             return decode_step(params, state, token, mcfg, nx)
 
         self._jit_step = jax.jit(_step, donate_argnums=(1,))
 
         def _prefill(params, state, tokens, n_tokens, key):
-            nx = Numerics(quant, key)
+            nx = Numerics(quant, key, mesh=mesh)
             return prefill(params, state, tokens, n_tokens, mcfg, nx)
 
         # One compile per chunk bucket (shape-specialized), nothing more.

@@ -213,6 +213,106 @@ def test_packed_rejects_mismatched_config():
 
 
 # ---------------------------------------------------------------------------
+# Property tests: pack -> unpack round-trip at arbitrary tile widths
+# ---------------------------------------------------------------------------
+#
+# The parametrized suites above pin tile widths to the hardware-typical
+# 8/32/128; nothing guaranteed the pack/dequantize pair for OTHER widths
+# (including non-powers-of-two) or for K/N deliberately off every block
+# multiple.  These are seeded-random property checks of the round-trip
+# invariants; shapes are drawn per seed so each run covers a spread of
+# (tile, K, N) combinations without hypothesis.
+
+
+def _roundtrip_case(seed):
+    rng = np.random.default_rng(seed)
+    tile = int(rng.choice([3, 5, 8, 12, 24, 32, 48, 96, 128, 160]))
+    k = int(rng.integers(1, 6) * tile + rng.integers(1, tile + 1))  # off-tile
+    n = int(rng.integers(1, 300))
+    bits = int(rng.choice([4, 6, 8]))
+    return tile, k, n, bits
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_pack_roundtrip_random_tiles_and_ragged_shapes(seed):
+    """Round-trip invariants for random (tile, K, N, bits_w):
+
+      * dequantize(pack(w)) lands exactly on the quantize_weight_tiles
+        lattice (codes * delta_w * scales), at the original (K, N);
+      * codes stay within [-L_w, +L_w];
+      * K rows beyond k and lane-padding columns are all-zero codes AND
+        all-zero scales (they must contribute exactly 0 to any matmul).
+    """
+    tile, k, n, bits = _roundtrip_case(seed)
+    cfg = QuantConfig(tile_width=tile, bits_w=bits, out_dtype=jnp.float32)
+    w = np.asarray(
+        jax.random.laplace(jax.random.PRNGKey(seed), (k, n)) * 0.3,
+        np.float32)
+    pw = pack_abfp_weight(jnp.asarray(w), cfg)
+
+    assert pw.shape == (k, n)
+    assert pw.kp == -(-k // tile) * tile
+    assert pw.n_padded == -(-n // 128) * 128
+    lvl = 2 ** (bits - 1) - 1
+    codes = np.asarray(pw.codes, np.float32)
+    assert np.abs(codes).max() <= lvl
+    assert not codes[k:].any() and not codes[:, n:].any()
+    scales = np.asarray(pw.scales, np.float32)
+    assert not scales[:, n:].any()
+
+    w_q, s_w = quantize_weight_tiles(jnp.asarray(w), cfg)
+    lattice = (np.asarray(w_q, np.float32) * quant_delta(bits)
+               * np.asarray(s_w, np.float32)[:, None, :]).reshape(-1, n)[:k]
+    np.testing.assert_array_equal(np.asarray(dequantize_packed(pw)), lattice)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_pack_roundtrip_error_bounded(seed):
+    """|dequantize(pack(w)) - w| <= per-element quantization budget:
+    half a weight bin times the (bf16-rounded) tile scale."""
+    tile, k, n, bits = _roundtrip_case(seed + 100)
+    cfg = QuantConfig(tile_width=tile, bits_w=bits, out_dtype=jnp.float32)
+    w = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(seed + 100), (k, n)) * 0.5,
+        np.float32)
+    pw = pack_abfp_weight(jnp.asarray(w), cfg)
+    w_deq = np.asarray(dequantize_packed(pw))
+    # Per (tile, col) scale, bf16-rounded down by at most 1 part in 256:
+    # elements quantize within half a bin of that scale (plus the clamp
+    # slack when bf16(max) < max, bounded by the same factor).
+    t = pw.num_tiles
+    w_pad = np.zeros((t * tile, n), np.float32)
+    w_pad[:k] = w
+    s = np.abs(w_pad.reshape(t, tile, n)).max(axis=1)          # (T, N)
+    bound = (s * (0.5 * quant_delta(bits) + 1 / 256.0) + 1e-7)[:, None, :]
+    err = np.abs(w_deq - w).reshape(-1, n)
+    err_t = np.zeros((t * tile, n), np.float32)
+    err_t[:k] = err
+    assert (err_t.reshape(t, tile, n) <= bound).all()
+
+
+def test_packed_param_bytes_counts_scales():
+    """Regression: the HBM accounting must include the bf16 scale planes,
+    not just the int8 codes (scales are T/K of the code bytes at bf16 —
+    at tile 8 they are a QUARTER of the packed footprint)."""
+    from repro.models.packing import packed_param_bytes
+
+    cfg = QuantConfig(tile_width=8, out_dtype=jnp.float32)
+    _, w = _rand((1, 256, 128))
+    pw = pack_abfp_weight(w, cfg)
+    expect = (pw.codes.size * pw.codes.dtype.itemsize
+              + pw.scales.size * pw.scales.dtype.itemsize)
+    assert pw.nbytes() == expect
+    assert packed_param_bytes({"wq": pw}) == expect
+    # scale bytes are material: (T=32, 128) bf16 vs (256, 128) int8 codes
+    assert pw.scales.size * pw.scales.dtype.itemsize == expect // 5
+    # mixed tree: float leaves counted at their own dtype width
+    extra = jnp.zeros((16, 4), jnp.float32)
+    assert packed_param_bytes({"wq": pw, "norm": extra}) \
+        == expect + extra.size * 4
+
+
+# ---------------------------------------------------------------------------
 # Dispatch + STE
 # ---------------------------------------------------------------------------
 

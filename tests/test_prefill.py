@@ -216,3 +216,44 @@ def test_engine_rejects_oversized_request():
     assert {r.uid for r in done} == {2, 3}
     assert next(r for r in done if r.uid == 3).generated == []
     assert len(next(r for r in done if r.uid == 2).generated) == 2
+
+
+# ---------------------------------------------------------------------------
+# Cache-full boundary: padding lanes must never race the last real write
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_append_at_cache_boundary_keeps_real_write():
+    """Regression (found failing, then fixed): with length + n_tokens ==
+    S_max, the chunk scatter's padding lanes used to CLAMP onto index
+    S_max - 1 — the very slot the last real token writes — and the
+    duplicate-index race let the stale value win, silently corrupting the
+    final K/V append.  Padding lanes past the cache end are dropped now;
+    the boundary append must match a padding-free 1-token chunk exactly."""
+    from repro.models.layers import chunk_append_attend
+
+    b, s, h, d, s_max = 2, 4, 2, 8, 8
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, d))
+    cache = {
+        "k": jax.random.normal(jax.random.fold_in(key, 3), (b, s_max, h, d)),
+        "v": jax.random.normal(jax.random.fold_in(key, 4), (b, s_max, h, d)),
+        "length": jnp.array([s_max - 1, s_max - 3], jnp.int32),
+    }
+    n_tokens = jnp.array([1, 2], jnp.int32)     # slot 0 fills the cache
+
+    out, new = chunk_append_attend(q, k, v, dict(cache),
+                                   n_tokens=n_tokens, window=0)
+    # Padding-free reference: per-slot 1-token appends (slot 0) / the same
+    # chunk without excess lanes (slot 1 via a 2-token chunk).
+    out1, ref = chunk_append_attend(q[:, :2], k[:, :2], v[:, :2],
+                                    dict(cache), n_tokens=n_tokens, window=0)
+    np.testing.assert_array_equal(np.asarray(new["k"][0, s_max - 1]),
+                                  np.asarray(k[0, 0]))
+    np.testing.assert_array_equal(np.asarray(new["k"]), np.asarray(ref["k"]))
+    np.testing.assert_array_equal(np.asarray(new["v"]), np.asarray(ref["v"]))
+    np.testing.assert_array_equal(np.asarray(out[:, :2]), np.asarray(out1))
+    np.testing.assert_array_equal(np.asarray(new["length"]),
+                                  np.asarray(cache["length"]) + [1, 2])

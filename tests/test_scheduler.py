@@ -374,3 +374,91 @@ def test_temperature_draws_independent_of_interleaving(tiny):
     eng = ServingEngine(params, mcfg, capacity=2, max_len=32, seed=0)
     eng.run([other, target2])
     assert target2.generated == alone
+
+
+# ---------------------------------------------------------------------------
+# capacity == 1 corner: admission through a single slot must never wedge
+# ---------------------------------------------------------------------------
+#
+# The ISSUE-5 satellite: ``_reset_slot`` and ``fits()`` had no coverage for
+# the single-slot engine, where every admission recycles the one slot state
+# and any drained-but-unpolled request must free it for the queue behind.
+# These pin the corner: back-to-back recycling through poll()/drain(), the
+# prompt + max_new == max_len admission boundary, legacy prefill-in-decode,
+# and the manual try_admit()/step() API where the caller never polls.
+
+
+def test_capacity_one_recycles_slot_through_drain(tiny):
+    """Three queued requests funnel through one slot: conservation holds,
+    the slot and queue end empty, and every admission reset the slot (each
+    request decodes from ITS OWN prompt, not leftover state)."""
+    params, mcfg = tiny
+    eng = ServingEngine(params, mcfg, capacity=1, max_len=16,
+                        prefill_chunks=(4,))
+    reqs = [_req(0, plen=5, max_new=3), _req(1, plen=1, max_new=2),
+            _req(2, plen=7, max_new=3)]
+    for r in reqs:
+        assert eng.submit(r)
+    done = eng.drain()
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    assert all(len(r.generated) == r.max_new_tokens for r in reqs)
+    assert eng.slots == [None] and len(eng.scheduler) == 0
+
+    # Same prompts served one-per-engine give identical tokens: the slot
+    # reset between occupants leaked nothing.
+    for r in reqs:
+        solo = ServingEngine(params, mcfg, capacity=1, max_len=16,
+                             prefill_chunks=(4,))
+        q = _req(r.uid, plen=len(r.prompt), max_new=r.max_new_tokens)
+        solo.run([q])
+        assert q.generated == r.generated, r.uid
+
+
+def test_capacity_one_admits_at_max_len_boundary(tiny):
+    """prompt + max_new == max_len is admissible (fits() boundary) and must
+    complete through the single slot, including a successor request."""
+    params, mcfg = tiny
+    eng = ServingEngine(params, mcfg, capacity=1, max_len=12,
+                        prefill_chunks=(4, 8))
+    boundary = _req(0, plen=8, max_new=4)           # 8 + 4 == max_len
+    succ = _req(1, plen=2, max_new=2)
+    assert eng.fits(boundary)
+    assert not eng.fits(_req(9, plen=9, max_new=4))  # one past: rejected
+    for r in (boundary, succ):
+        assert eng.submit(r)
+    done = eng.drain()
+    assert [len(r.generated) for r in done] == [4, 2]
+    assert eng.slots == [None]
+
+
+def test_capacity_one_legacy_prefill_in_decode(tiny):
+    """chunked=False: the one slot consumes prompts a token per tick and
+    still recycles cleanly."""
+    params, mcfg = tiny
+    eng = ServingEngine(params, mcfg, capacity=1, max_len=16, chunked=False)
+    reqs = [_req(0, plen=3, max_new=2), _req(1, plen=2, max_new=2)]
+    done = eng.run(reqs)
+    assert sorted(r.uid for r in done) == [0, 1]
+    assert all(len(r.generated) == 2 for r in done)
+
+
+def test_capacity_one_drained_unpolled_slot_frees_for_manual_admit(tiny):
+    """Manual try_admit()/step() (no poll()): when the only slot's request
+    drains its token budget, the slot must free IMMEDIATELY — a follow-up
+    try_admit in the same tick loop succeeds instead of deadlocking, and
+    completion flushing does not depend on ever calling poll()."""
+    params, mcfg = tiny
+    eng = ServingEngine(params, mcfg, capacity=1, max_len=16,
+                        prefill_chunks=(4,))
+    a = _req(0, plen=4, max_new=2)
+    assert eng.try_admit(a)
+    for _ in range(8):
+        if a.done:
+            break
+        eng.step()
+    assert a.done and eng.slots == [None]
+    b = _req(1, plen=2, max_new=2)
+    assert eng.try_admit(b), "slot still held by a drained request"
+    while not b.done:
+        eng.step()
+    assert len(b.generated) == 2
