@@ -16,7 +16,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: lint test-fast test test-slow test-dist bench bench-smoke bench-serving
+.PHONY: lint test-fast test test-slow test-dist test-faults bench bench-smoke bench-serving bench-faults
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \
@@ -61,3 +61,15 @@ bench-smoke:
 # open-loop load sweep: p50/p99 TTFT and goodput per quant mode).
 bench-serving:
 	$(PY) benchmarks/bench_serving.py
+
+# Goodput-under-fault-rate sweep (abfp-packed, simulated clock, seeded
+# fault traces) -> BENCH_serving_faults.json.  Exits nonzero unless
+# recovery-on beats recovery-off at every rate — the CI fault gate.
+bench-faults:
+	$(PY) benchmarks/bench_serving.py --faults-only
+
+# Fault-injection / recovery suite (includes the @dist mesh-reshard cases
+# on 8 forced placeholder CPU devices).
+test-faults:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+		$(PY) -m pytest -q -m fault

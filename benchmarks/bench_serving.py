@@ -46,7 +46,7 @@ import numpy as np
 from repro.configs import smoke_config
 from repro.core.abfp import QuantConfig
 from repro.models import init_params, param_count
-from repro.serving import Request, ServingEngine
+from repro.serving import FaultConfig, Request, ServingEngine
 
 
 def _quant(mode: str) -> QuantConfig:
@@ -158,6 +158,100 @@ def bench_open_loop(params, mcfg, *, mode, load, capacity, prompt_len,
 
 
 # ---------------------------------------------------------------------------
+# Goodput under fault injection: rate sweep, recovery on vs off
+# ---------------------------------------------------------------------------
+
+FAULT_RATES = (0.001, 0.01, 0.05)
+
+
+def bench_fault_sweep(params, mcfg, *, mode, seed,
+                      rates=FAULT_RATES, n_requests=24) -> list:
+    """Open-loop goodput vs per-tick fault rate, recovery on vs off.
+
+    Runs on the SIMULATED clock (deterministic: same seeds -> same fault
+    trace and the same arrivals for every cell), small shapes — this
+    measures robustness accounting, not kernel throughput.  Goodput
+    excludes corrupted requests (tokens computed against unrepaired
+    faulted weights); ``degraded_goodput`` counts them anyway.  Every cell
+    asserts request conservation after drain."""
+    capacity, prompt_len, max_new, max_len = 4, 8, 8, 64
+    chunks = (4, 8)
+
+    def _arrivals(rng):
+        return np.cumsum(rng.exponential(1.0, n_requests))
+
+    # Fault-free calibration fixes the TTFT SLO for every cell.
+    eng = ServingEngine(params, mcfg, capacity=capacity, max_len=max_len,
+                        quant=_quant(mode), seed=seed, chunked=True,
+                        prefill_chunks=chunks)
+    rng = np.random.default_rng(seed)
+    arrivals = _arrivals(rng)
+    for i, at in enumerate(arrivals):
+        eng.submit(Request(uid=i,
+                           prompt=rng.integers(
+                               1, mcfg.vocab_size, prompt_len).tolist(),
+                           max_new_tokens=max_new, arrival_time=float(at)))
+    eng.drain()
+    calib = eng.metrics.summary()
+    slo_ttft = 3.0 * calib["ttft"]["p50"]
+
+    rows = []
+    for rate in rates:
+        for recovery in (True, False):
+            eng = ServingEngine(
+                params, mcfg, capacity=capacity, max_len=max_len,
+                quant=_quant(mode), seed=seed, chunked=True,
+                prefill_chunks=chunks,
+                # horizon ~ the trace length so the >=1-event floor lands
+                # inside the run even at the 0.1% rate.
+                faults=FaultConfig(rate=rate, seed=seed + 17, horizon=48),
+                recovery=recovery, detect_every=2)
+            rng = np.random.default_rng(seed)
+            arrivals = _arrivals(rng)
+            for i, at in enumerate(arrivals):
+                eng.submit(Request(
+                    uid=i,
+                    prompt=rng.integers(
+                        1, mcfg.vocab_size, prompt_len).tolist(),
+                    max_new_tokens=max_new, arrival_time=float(at)))
+            eng.drain()
+            cons = eng.metrics.conservation()
+            assert cons["ok"], (rate, recovery, cons)
+            s = eng.metrics.summary()
+            good = eng.metrics.goodput(slo_ttft)
+            degraded = eng.metrics.goodput(slo_ttft,
+                                           include_corrupted=True)
+            rows.append({
+                "mode": mode, "fault_rate": rate, "recovery": recovery,
+                "slo_ttft": round(slo_ttft, 4),
+                "goodput_per_tick": None if good is None else round(good, 4),
+                "degraded_goodput_per_tick": (
+                    None if degraded is None else round(degraded, 4)),
+                "injected": s["faults"]["injected"],
+                "detected": s["faults"]["detected"],
+                "cols_remapped": s["faults"]["cols_remapped"],
+                "tiles_requantized": s["faults"]["tiles_requantized"],
+                "reshards": s["faults"]["reshards"],
+                "corrupted": s["requests"]["corrupted"],
+                "requeued": s["requests"]["requeued"],
+                "timed_out": s["requests"]["timed_out"],
+                "conservation_ok": cons["ok"],
+                "ticks": s["ticks"],
+            })
+    return rows
+
+
+def fault_gate(rows) -> bool:
+    """Recovery-on must beat recovery-off on goodput at every rate."""
+    by_rate = {}
+    for r in rows:
+        by_rate.setdefault(r["fault_rate"], {})[r["recovery"]] = (
+            r["goodput_per_tick"] or 0.0)
+    return all(pair.get(True, 0.0) > pair.get(False, 0.0)
+               for pair in by_rate.values())
+
+
+# ---------------------------------------------------------------------------
 # Per-mesh-shape sweep: sharded serving throughput at forced CPU meshes
 # ---------------------------------------------------------------------------
 
@@ -245,10 +339,58 @@ def main() -> None:
     ap.add_argument("--no-mesh-sweep", action="store_true",
                     help="skip the per-mesh-shape sharded-serving sweep "
                          "(full runs only; --smoke never sweeps)")
+    ap.add_argument("--faults-only", action="store_true",
+                    help="run ONLY the goodput-under-fault-rate sweep and "
+                         "write BENCH_serving_faults.json; exits nonzero "
+                         "when recovery-on fails to beat recovery-off at "
+                         "any rate (the CI fault gate)")
+    ap.add_argument("--fault-rates", default=None,
+                    help="comma-separated per-tick fault rates for the "
+                         "sweep (default 0.001,0.01,0.05)")
+    ap.add_argument("--no-fault-sweep", action="store_true",
+                    help="skip the fault sweep on full runs")
     args = ap.parse_args()
 
     if args.mesh_one:
         mesh_one(args)
+        return
+
+    fault_rates = (tuple(float(x) for x in args.fault_rates.split(","))
+                   if args.fault_rates else FAULT_RATES)
+    if args.faults_only:
+        mcfg = smoke_config(args.arch)
+        params = init_params(jax.random.PRNGKey(args.seed), mcfg)
+        print(f"[bench_serving] fault sweep only: rates={fault_rates}, "
+              f"mode=abfp-packed")
+        fault_rows = bench_fault_sweep(params, mcfg, mode="abfp-packed",
+                                       seed=args.seed, rates=fault_rates)
+        for r in fault_rows:
+            print(f"  rate {r['fault_rate']:6.3f} "
+                  f"recovery={'on ' if r['recovery'] else 'off'} "
+                  f"goodput {r['goodput_per_tick']} "
+                  f"(degraded {r['degraded_goodput_per_tick']})  "
+                  f"inj {r['injected']} corrupt {r['corrupted']} "
+                  f"requeue {r['requeued']} reshards {r['reshards']}")
+        ok = fault_gate(fault_rows)
+        out = args.out
+        if out is None:
+            root = Path(__file__).resolve().parent.parent
+            out = str(root / "BENCH_serving_faults.json")
+        Path(out).write_text(json.dumps({
+            "benchmark": "serving_fault_sweep",
+            "arch": args.arch, "reduced": True,
+            "backend": jax.default_backend(),
+            "fault_sweep": fault_rows,
+            "gate": {"pass": bool(ok),
+                     "metric": "goodput recovery-on > recovery-off",
+                     "rates": list(fault_rates)},
+        }, indent=2) + "\n")
+        print(f"[bench_serving] wrote {out}")
+        if not ok:
+            print("[bench_serving] fault gate FAIL: recovery-on did not "
+                  "beat recovery-off at every rate")
+            sys.exit(1)
+        print("[bench_serving] fault gate OK")
         return
 
     if args.smoke:
@@ -301,6 +443,23 @@ def main() -> None:
               "subprocess per shape)")
         mesh_rows = mesh_sweep(args)
 
+    fault_rows = []
+    if not args.smoke and not args.no_fault_sweep:
+        print("[bench_serving] goodput-under-fault-rate sweep "
+              "(abfp-packed, simulated clock)")
+        fault_rows = bench_fault_sweep(params, mcfg, mode="abfp-packed",
+                                       seed=args.seed, rates=fault_rates)
+        for r in fault_rows:
+            print(f"  rate {r['fault_rate']:6.3f} "
+                  f"recovery={'on ' if r['recovery'] else 'off'} "
+                  f"goodput {r['goodput_per_tick']} "
+                  f"(degraded {r['degraded_goodput_per_tick']})  "
+                  f"inj {r['injected']} corrupt {r['corrupted']} "
+                  f"requeue {r['requeued']} reshards {r['reshards']}")
+        if not fault_gate(fault_rows):
+            print("[bench_serving] WARNING: recovery-on did not beat "
+                  "recovery-off at every fault rate")
+
     gate_ok = (speedups.get("float", 1.0) >= 1.0)
     result = {
         "benchmark": "serving_smoke" if args.smoke else "serving_ttft",
@@ -311,6 +470,7 @@ def main() -> None:
         "rows": rows, "speedup_ttft": speedups,
         "open_loop": open_rows,
         "mesh_sweep": mesh_rows,
+        "fault_sweep": fault_rows,
     }
     if args.smoke:
         # Machine-readable gate verdict: CI uploads this artifact, so the

@@ -378,6 +378,60 @@ def dequantize_packed(pw: PackedWeight) -> Array:
     return w[..., :pw.k, :pw.n_cols]
 
 
+def scale_storage_eps(scale_dtype=jnp.bfloat16) -> float:
+    """Relative quantum of the scale storage dtype (bf16: 2^-8 ≈ 0.39%).
+
+    The smallest relative change of a stored tile scale that is
+    representable — anything below it is storage noise, anything a few
+    multiples above it is a REAL change of the programmed array.  Fault
+    detection (``serving.faults``) derives its drift tolerance from this:
+    the ABFP scale statistics bound how far a healthy tile's fingerprint
+    can move without the array having drifted.
+    """
+    return float(jnp.finfo(scale_dtype).eps) / 2.0
+
+
+def packed_tile_fingerprint(pw: PackedWeight) -> Array:
+    """Per-(tile, col) probe response ``R[t, j] = (sum_i |codes[t, i, j]|)
+    * delta_w * scales[t, j]`` — (..., T, Np) f32.
+
+    The digital analogue of a calibration-ramp readout: drive every row of
+    tile ``t`` with a full-scale input and read column ``j``'s magnitude.
+    The inner |code| sum is exact in f32 (|p| <= n * L_w < 2^24), so for a
+    healthy array the fingerprint is bit-stable across reads; a drifted
+    scale moves R by exactly the drift factor and a dead column reads 0.
+    Cost is one pass over the codes — the cheap per-probe detection path
+    (``serving.faults.detect_site``), NOT a model forward.
+    """
+    n = pw.tile_width
+    lead = pw.codes.shape[:-2]
+    ct = jnp.abs(pw.codes.astype(jnp.float32)).reshape(
+        *lead, pw.num_tiles, n, pw.n_padded)
+    code_sum = ct.sum(axis=-2)                              # (..., T, Np)
+    d = jnp.float32(quant_delta(pw.bits_w))
+    return code_sum * d * pw.scales.astype(jnp.float32)
+
+
+def packed_output_error_bound(pw: PackedWeight, cfg: QuantConfig) -> Array:
+    """Worst-case |y[j]| bound per output column for unit-scale inputs,
+    (..., Np) f32.
+
+    Per tile the exact partial product obeys ``|p| * d_X * d_W <=
+    d_W * sum_i |codes[t, i, j]|`` when every ``|x_hat_i| <= 1``, i.e. the
+    fingerprint is the largest represented response any admissible input
+    can draw; ADC rounding plus LSB noise add at most ``(0.5 + noise_lsb)
+    * bin_y / G`` per tile (the clamp only shrinks further).  Summed over
+    tiles this is a sound envelope: any healthy column's probe response
+    sits below it, so a reading ABOVE the bound is unambiguous corruption
+    (the converse, a dead column, is caught by the fingerprint zero test
+    in ``serving.faults.detect_site``).
+    """
+    fp = packed_tile_fingerprint(pw)                        # (..., T, Np)
+    s = pw.scales.astype(jnp.float32)
+    adc_err = (0.5 + cfg.noise_lsb) * cfg.bin_y / cfg.gain
+    return (fp + s * adc_err).sum(axis=-2)
+
+
 def quantize_weight_tiles(w: Array, cfg: QuantConfig):
     """Convert a (K, N) weight matrix into ABFP tiles.
 

@@ -98,3 +98,20 @@ def plan_elastic_mesh(chips_available: int, model_parallel: int,
     new_shape = (data, model_parallel)
     lost = int((old_shape[0] * old_shape[1] - chips_available))
     return ElasticPlan(tuple(old_shape), new_shape, max(lost, 0))
+
+
+def plan_recovery_mesh(chips_available: int, model_parallel: int,
+                       old_shape: tuple) -> ElasticPlan:
+    """``plan_elastic_mesh`` for fault recovery: degrade the model axis
+    when the surviving chips cannot hold it.
+
+    Holding TP fixed is the cheap move only while all model banks are
+    healthy; after a shard-drop recovery the weights are re-programmed
+    from the clean master anyway (``serving.engine``), so a narrower model
+    axis is admissible.  Raises like ``plan_elastic_mesh`` only when no
+    chips survive at all.
+    """
+    if chips_available < 1:
+        raise RuntimeError("no surviving chips to re-mesh onto")
+    mp = max(1, min(model_parallel, chips_available))
+    return plan_elastic_mesh(chips_available, mp, old_shape)

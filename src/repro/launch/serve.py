@@ -49,7 +49,7 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.core.abfp import QuantConfig
 from repro.models import init_params, param_count
-from repro.serving import Request, ServingEngine
+from repro.serving import FaultConfig, Request, ServingEngine
 
 
 def parse_mesh(arg: Optional[str]) -> Optional[Tuple[int, int]]:
@@ -162,6 +162,25 @@ def main() -> None:
                     help="dp,tp — serve tensor-parallel on a (data, model) "
                          "mesh; placeholder CPU devices are forced when the "
                          "host has fewer than dp*tp (CPU-CI friendly)")
+    # Fault injection / SLO-aware recovery (repro.serving.faults).
+    ap.add_argument("--fault-rate", type=float, default=None,
+                    help="per-tick fault probability; enables seeded "
+                         "injection into the served weights")
+    ap.add_argument("--fault-kinds", default="stuck_col,scale_drift,"
+                                             "shard_drop",
+                    help="comma-separated subset of "
+                         "stuck_col/scale_drift/shard_drop")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the deterministic fault trace")
+    ap.add_argument("--no-recovery", action="store_true",
+                    help="inject but do not detect/repair (degraded-mode "
+                         "baseline for the goodput comparison)")
+    ap.add_argument("--detect-every", type=int, default=4,
+                    help="fingerprint-probe cadence in engine ticks")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in ticks after arrival; "
+                         "expired requests are cancelled and counted "
+                         "timed_out")
     args = ap.parse_args()
 
     mesh_shape = parse_mesh(args.mesh)
@@ -189,19 +208,34 @@ def main() -> None:
                  if mesh is not None else "")
     print(f"[serve] {args.arch}: {param_count(params)/1e6:.1f}M params, "
           f"quant={args.quant}, policy={args.policy}{mesh_note}")
+    faults = None
+    if args.fault_rate is not None:
+        faults = FaultConfig(
+            rate=args.fault_rate,
+            kinds=tuple(k for k in args.fault_kinds.split(",") if k),
+            seed=args.fault_seed)
+        print(f"[serve] fault injection: rate={args.fault_rate}/tick, "
+              f"kinds={args.fault_kinds}, seed={args.fault_seed}, "
+              f"recovery={'off' if args.no_recovery else 'on'}")
     eng = ServingEngine(params, mcfg, capacity=args.capacity,
                         max_len=args.max_len, quant=quant, seed=args.seed,
                         chunked=not args.no_chunked,
                         policy=args.policy,
                         prefill_chunks=tuple(
                             int(c) for c in args.prefill_chunks.split(",")),
-                        mesh=mesh)
+                        mesh=mesh,
+                        faults=faults,
+                        recovery=not args.no_recovery,
+                        detect_every=args.detect_every)
     rng = np.random.default_rng(args.seed)
 
     open_loop = args.arrival_rate is not None or args.trace is not None
     if open_loop:
         reqs = (trace_workload(mcfg, args, rng) if args.trace
                 else poisson_workload(mcfg, args, rng))
+        if args.deadline is not None:
+            for r in reqs:
+                r.deadline = (r.arrival_time or 0.0) + args.deadline
         for r in reqs:
             eng.submit(r)
         span = max(r.arrival_time for r in reqs) if reqs else 0.0
@@ -241,6 +275,20 @@ def main() -> None:
           f"req/tick (TTFT<={args.slo_ttft}), utilization "
           f"{'-' if util is None else f'{util:.0%}'}, max queue depth "
           f"{s['queue_depth']['max']}")
+    req_s = s["requests"]
+    if args.fault_rate is not None or args.deadline is not None:
+        f = s["faults"]
+        cons = eng.metrics.conservation()
+        print(f"[serve] faults: {f['injected']} injected "
+              f"({f['injected_stuck_col']} stuck_col, "
+              f"{f['injected_scale_drift']} scale_drift, "
+              f"{f['injected_shard_drop']} shard_drop), "
+              f"{f['detected']} detected, {f['cols_remapped']} cols "
+              f"remapped, {f['tiles_requantized']} tiles requantized, "
+              f"{f['reshards']} reshards")
+        print(f"[serve] timed_out {req_s['timed_out']}, requeued "
+              f"{req_s['requeued']}, corrupted {req_s['corrupted']}, "
+              f"conservation_ok {cons['ok']}")
     if args.metrics_out:
         eng.metrics.to_json(args.metrics_out, policy=args.policy,
                             quant=args.quant,

@@ -1,6 +1,16 @@
 """repro.serving — arrival-driven continuous-batching engine (ABFP or
-float numerics): engine core + pluggable schedulers + SLO metrics."""
+float numerics): engine core + pluggable schedulers + SLO metrics +
+fault injection/detection/recovery."""
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.faults import (  # noqa: F401
+    FAULT_KINDS,
+    Detection,
+    FaultConfig,
+    FaultEvent,
+    FaultPlan,
+    drift_detect_rtol,
+    make_fault_plan,
+)
 from repro.serving.metrics import (  # noqa: F401
     RequestMetrics,
     ServingMetrics,

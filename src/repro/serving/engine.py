@@ -96,8 +96,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.abfp import QuantConfig
+from repro.distributed.fault import StragglerMonitor, plan_recovery_mesh
 from repro.models import decode_step, init_decode_state, prefill
 from repro.models.layers import Numerics
+from repro.serving import faults as faultlib
+from repro.serving.faults import FaultConfig, FaultPlan
 from repro.serving.metrics import ServingMetrics
 from repro.serving.scheduler import Scheduler, get_scheduler
 
@@ -111,10 +114,14 @@ class Request:
     arrival_time: Optional[float] = None    # engine clock; None = at submit
     priority: int = 0                       # larger = served first
     tenant: str = "default"                 # fairness domain for `priority`
+    deadline: Optional[float] = None    # absolute engine-clock time; past it
+                                        # the request is cancelled (queued or
+                                        # in-flight) and marked timed_out
     on_token: Optional[Callable[["Request", int], None]] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     prompt_pos: int = 0                 # prompt tokens consumed so far
     done: bool = False
+    timed_out: bool = False             # cancelled by deadline expiry
 
 
 class ServingEngine:
@@ -127,7 +134,10 @@ class ServingEngine:
                  policy: Union[str, Scheduler] = "fcfs",
                  tick_time: float = 1.0,
                  clock: Optional[Callable[[], float]] = None,
-                 mesh=None):
+                 mesh=None,
+                 faults: Optional[Union[FaultConfig, FaultPlan]] = None,
+                 recovery: bool = True,
+                 detect_every: int = 4):
         self.mesh = mesh
         if quant.mode == "abfp_packed":
             # Quantize-once: pack every dense weight at admission time so
@@ -166,6 +176,42 @@ class ServingEngine:
         self._clock = clock             # None => simulated (tick_time/pass)
         self.now = clock() if clock is not None else 0.0
         self._just_finished: List[Request] = []
+        self._has_deadlines = False     # set on first deadline'd request
+
+        # Wall-clock tick monitoring: every jitted pass's host-visible
+        # duration feeds the trailing-median straggler model; escalation
+        # state (log -> reslice -> remesh) surfaces in metrics.summary().
+        self.straggler = StragglerMonitor()
+        self.metrics.straggler = self.straggler
+
+        # -- fault tolerance (serving.faults) ------------------------------
+        # With ``faults=None`` nothing below exists on the hot path: the
+        # params, jitted functions, and per-tick flow are identical to a
+        # build without fault machinery (zero-overhead guarantee,
+        # parity-tested in tests/test_faults.py).
+        self.recovery = recovery
+        self.detect_every = max(1, int(detect_every))
+        self._fault_cursor = 0
+        self._lost_shard: Optional[int] = None
+        self._fault_dirty = False       # unrepaired injected faults active
+        if isinstance(faults, FaultConfig):
+            from repro.kernels.ops import tp_size
+            faults = faultlib.make_fault_plan(self.params, faults,
+                                              tp=tp_size(mesh))
+        self.fault_plan: Optional[FaultPlan] = faults
+        if self.fault_plan is not None:
+            # Clean copy = the replicated hot spare the repairs re-program
+            # from (a reference, not a copy: injection replaces arrays).
+            self._params_clean = self.params
+            self._fault_sites = faultlib.fault_sites(self.params)
+            self._baselines = faultlib.fingerprint_baselines(self.params)
+
+        self._build_jitted()
+
+    def _build_jitted(self):
+        """(Re)build the jitted step/prefill/reset closures for the current
+        mesh — called at init and again after a shard-drop re-shard."""
+        mcfg, quant, mesh = self.mcfg, self.quant, self.mesh
 
         def _step(params, state, token, key):
             nx = Numerics(quant, key, mesh=mesh)
@@ -233,6 +279,8 @@ class ServingEngine:
             return False
         if req.arrival_time is None:
             req.arrival_time = self.now
+        if req.deadline is not None:
+            self._has_deadlines = True
         self.metrics.on_submit(req.uid, arrival_time=req.arrival_time,
                                tenant=req.tenant,
                                prompt_len=len(req.prompt))
@@ -251,6 +299,8 @@ class ServingEngine:
                 self.slots[i] = req
                 if req.arrival_time is None:
                     req.arrival_time = self.now
+                if req.deadline is not None:
+                    self._has_deadlines = True
                 self.metrics.on_admit(req.uid, self.now, tenant=req.tenant,
                                       prompt_len=len(req.prompt),
                                       arrival_time=req.arrival_time)
@@ -296,6 +346,11 @@ class ServingEngine:
         req.generated.append(nxt)
         self._next_input[i] = nxt
         self.metrics.on_token(req.uid, self.now)
+        if self._fault_dirty:
+            # This token was computed against faulted weights that no
+            # detection round has repaired yet: the request's output can't
+            # be trusted.  (Cleared if recovery later requeues it.)
+            self.metrics.on_corrupted(req.uid)
         if req.on_token is not None:
             req.on_token(req, nxt)
         if len(req.generated) >= req.max_new_tokens:
@@ -304,12 +359,173 @@ class ServingEngine:
             self.metrics.on_finish(req.uid, self.now)
             self._just_finished.append(req)
 
+    # -- deadlines --------------------------------------------------------
+    def _expire_slots(self):
+        """Cancel in-flight requests past their deadline: free the slot
+        immediately (the next admit resets its state) instead of letting a
+        stuck request squat until max_new_tokens."""
+        for i, req in enumerate(self.slots):
+            if (req is not None and req.deadline is not None
+                    and req.deadline <= self.now):
+                self.slots[i] = None
+                req.done = True
+                req.timed_out = True
+                self.metrics.on_timeout(req.uid, self.now)
+                self._just_finished.append(req)
+
+    def _expire_queue(self) -> List[Request]:
+        """Time out queued requests whose deadline already passed."""
+        expired = self.scheduler.expire(self.now)
+        for req in expired:
+            req.done = True
+            req.timed_out = True
+            self.metrics.on_timeout(req.uid, self.now)
+        return expired
+
+    # -- fault tolerance --------------------------------------------------
+    def _inject_due_faults(self):
+        """Apply every fault event scheduled at or before the current tick:
+        a sharding-preserving rewrite of the packed operands the jitted
+        step streams (serving.faults), so the fault flows through
+        dense_tp / the packed kernels at any mesh shape."""
+        from repro.kernels.ops import tp_size
+        due, self._fault_cursor = self.fault_plan.due(
+            self.ticks, self._fault_cursor)
+        for ev in due:
+            if ev.kind == "shard_drop":
+                # The injectable host-failure signal distributed.fault
+                # documents — recovery reads it as a health-check verdict.
+                self._lost_shard = ev.shard
+            self.params = faultlib.apply_event(
+                self.params, ev, tp=tp_size(self.mesh), quant=self.quant,
+                mesh=self.mesh)
+            self.metrics.on_fault(ev.kind)
+            self._fault_dirty = True
+
+    def _detect_and_recover(self):
+        """One detection round: fingerprint-probe every fault site against
+        its healthy baseline; with recovery on, repair what was found
+        (re-quantize drifted tiles, remap stuck columns, re-shard on a
+        lost-shard health signal + requeue its in-flight requests)."""
+        if self._lost_shard is not None and self.recovery:
+            self._reshard_and_requeue()
+            return
+        hits = []
+        for site in self._fault_sites:
+            cur = faultlib.site_fingerprint(self.params, site)
+            det = faultlib.detect_site(self._baselines[site.path], cur)
+            if not det.clean:
+                hits.append((site, det))
+        if hits:
+            self.metrics.on_detected(sum(
+                len(d.stuck_cols) + len(d.drifted) for _, d in hits))
+        if not self.recovery:
+            return
+        for site, det in hits:
+            if det.stuck_cols:
+                self.params = faultlib.repair_stuck(
+                    self.params, self._params_clean, site.path,
+                    det.stuck_cols)
+                self.metrics.on_repair("cols_remapped", len(det.stuck_cols))
+            if det.drifted:
+                self.params = faultlib.repair_drift(
+                    self.params, self._params_clean, site.path, det.drifted)
+                self.metrics.on_repair("tiles_requantized", len(det.drifted))
+        if hits:
+            # Tokens emitted during the dirty window were computed against
+            # faulted weights; with recovery on they are DISCARDED and the
+            # request re-decoded from the now-clean array (a shipped token
+            # is gone, so only in-flight requests can be salvaged).
+            self._requeue_corrupted()
+        # Everything detectable was just repaired; ticks from here on are
+        # clean until the next injection flips the flag back.
+        self._fault_dirty = False
+
+    def _requeue_corrupted(self):
+        """Restart in-flight requests whose partial output (and KV cache)
+        was produced under an active fault: free the slot, clear generated
+        tokens, and requeue — arrival order is preserved, so they re-admit
+        ahead of younger traffic."""
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            rec = self.metrics.requests.get(req.uid)
+            if rec is None or not rec.corrupted:
+                continue
+            self.slots[i] = None
+            self._next_input[i] = 0
+            req.prompt_pos = 0
+            req.generated.clear()
+            self.metrics.on_requeue(req.uid)
+            self.scheduler.requeue(req)
+
+    def _reshard_and_requeue(self):
+        """Shard-drop recovery: re-plan the mesh without the lost bank
+        (distributed.fault.plan_recovery_mesh), re-program weights from
+        the clean master onto the surviving chips, and requeue every
+        in-flight request through the scheduler with state reset — the
+        lost shard's slot state (KV caches) died with it, but no request
+        is ever lost (conservation: submitted == completed + rejected +
+        timed_out still holds over the whole trace)."""
+        import numpy as onp
+        from jax.sharding import Mesh
+
+        from repro.distributed.sharding import (
+            shard_decode_state,
+            shard_serving_params,
+        )
+
+        self._lost_shard = None
+        if self.mesh is not None and self.mesh.devices.size > 1:
+            old_shape = tuple(self.mesh.devices.shape)
+            dp, tp = old_shape
+            # Losing model bank s costs its chip in every data row.
+            plan = plan_recovery_mesh(dp * tp - dp, tp, old_shape)
+            devices = list(self.mesh.devices.flat)
+            keep = devices[: plan.new_shape[0] * plan.new_shape[1]]
+            self.mesh = Mesh(
+                onp.asarray(keep).reshape(plan.new_shape),
+                self.mesh.axis_names)
+            self.params = shard_serving_params(
+                self._params_clean, self.mesh, self.quant)
+            self._params_clean = self.params
+            self._build_jitted()        # closures bind the new mesh
+            self.state = init_decode_state(self.mcfg, self.capacity,
+                                           self.max_len)
+            self.state = shard_decode_state(self.state, self.mesh)
+        else:
+            # Single-array engine: re-program the array from the spare.
+            self.params = self._params_clean
+            self.state = init_decode_state(self.mcfg, self.capacity,
+                                           self.max_len)
+        inflight = [r for r in self.slots if r is not None]
+        self.slots = [None] * self.capacity
+        self._next_input[:] = 0
+        for req in inflight:
+            req.prompt_pos = 0
+            req.generated.clear()
+            self.metrics.on_requeue(req.uid)
+            self.scheduler.requeue(req)
+        self.metrics.on_repair("reshards", 1)
+        self._fault_dirty = False
+
     # -- one engine tick ------------------------------------------------------
     def step(self):
         # Completion flushing happens per pass (not only per poll) so a
         # long-lived engine driven through the legacy try_admit()/step()
         # path never accumulates finished Request objects.
         self._just_finished = []
+        if self._has_deadlines:
+            self._expire_slots()
+            self._just_finished.extend(self._expire_queue())
+        if self.fault_plan is not None:
+            # Detect (and repair) faults from earlier ticks BEFORE this
+            # tick's injections land, so every fault is live for at least
+            # one pass — then inject whatever the plan schedules now.
+            if self.ticks % self.detect_every == 0 and (
+                    self._fault_dirty or self._lost_shard is not None):
+                self._detect_and_recover()
+            self._inject_due_faults()
         live = [i for i, s in enumerate(self.slots) if s is not None]
         if not live:
             return
@@ -353,10 +569,12 @@ class ServingEngine:
             else:
                 tokens[i, 0] = self._next_input[i]
         self.key, sub = jax.random.split(self.key)
+        t0 = time.perf_counter()
         logits, self.state = self._jit_prefill(
             self.params, self.state, jnp.asarray(tokens),
             jnp.asarray(need), sub)
-        logits = np.asarray(logits, np.float32)
+        logits = np.asarray(logits, np.float32)     # host sync point
+        self.straggler.observe(time.perf_counter() - t0)
         self._tick_clock()
 
         for i in live:
@@ -372,8 +590,10 @@ class ServingEngine:
     def _decode_tick(self):
         token = jnp.asarray(self._next_input)
         self.key, sub = jax.random.split(self.key)
+        t0 = time.perf_counter()
         logits, self.state = self._jit_step(self.params, self.state, token, sub)
-        logits = np.asarray(logits, np.float32)
+        logits = np.asarray(logits, np.float32)     # host sync point
+        self.straggler.observe(time.perf_counter() - t0)
         self._tick_clock()
 
         for i, req in enumerate(self.slots):

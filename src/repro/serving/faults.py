@@ -1,0 +1,469 @@
+"""Fault injection, detection, and repair for the analog serving stack.
+
+The paper's premise is that analog hardware drifts and breaks; Demirkiran
+et al. ("A Blueprint for Precise and Fault-Tolerant Analog Neural
+Networks", PAPERS.md) observe that analog faults are STRUCTURED — a dead
+column driver kills one output column, conductance drift scales one tile's
+effective weights — and structured faults are detectable and recoverable.
+This module provides the serving-side machinery:
+
+Fault model (``FaultKind``)
+---------------------------
+  * ``stuck_col``   — stuck-at-zero output columns: the column's codes AND
+    scales are zeroed (a dead column driver contributes nothing).
+  * ``scale_drift`` — per-(tile, col) multiplicative drift on
+    ``PackedWeight`` scales (conductance drift re-scales a programmed
+    tile); drift factors are drawn outside the bf16 scale-storage
+    tolerance so they are detectable in principle.
+  * ``shard_drop``  — a whole model-axis shard dies: every column-sharded
+    weight loses its columns on that shard (replicated weights survive on
+    the remaining chips).  The event also raises the injectable
+    host-failure signal ``distributed.fault`` documents — a real
+    deployment wires GCS health checks into the same hook.
+
+Injection is WEIGHT-SPACE: a fault event rewrites the packed operands
+(int8 codes / bf16 scales — or float weight columns) that the engine's
+jitted step streams, exactly as a drifted or dead analog array would
+present them.  The rewrite is a sharding-preserving elementwise/scatter
+update, so injected faults flow through ``kernels.ops.dense_tp`` and the
+packed Pallas kernels unchanged at any (dp, tp) mesh shape — no kernel or
+model code knows faults exist, and with no plan attached the engine is
+bit-identical to a fault-free build (zero-overhead guarantee).
+
+Plans are DETERMINISTIC: ``make_fault_plan(params, cfg)`` draws every
+event (tick, kind, site, columns, tiles, drift factors) from one seeded
+``numpy`` generator, so a fault trace replays exactly across runs, meshes,
+and recovery settings — which is what makes recovery-on vs recovery-off
+goodput comparable in ``benchmarks/bench_serving.py``.
+
+Detection
+---------
+``site_fingerprint`` reduces each weight to the per-(tile, col) probe
+response ``R[t, j] = sum_i |codes[t, i, j]| * delta_w * scales[t, j]``
+(``core.abfp.packed_tile_fingerprint``) — the digital analogue of a
+calibration-ramp readout of column conductance sums.  ``detect_site``
+compares the live fingerprint against the healthy baseline captured at
+engine init: a relative deviation beyond ``drift_detect_rtol`` (derived
+from the bf16 scale quantum, ``core.abfp.scale_storage_eps``) flags a
+drifted tile; a column whose every tile reads exactly zero against a
+nonzero baseline is stuck.
+
+Repair primitives (the engine drives these; ``repro.serving.engine``)
+---------------------------------------------------------------------
+  * ``repair_drift``  — re-quantize-on-drift: restore ONLY the drifted
+    (tile, col) scales from the clean packed copy (for weights packed
+    once at init, the clean copy IS the re-quantization result).
+  * ``repair_stuck``  — remap stuck columns to the replicated hot copy:
+    codes + scales for those columns are re-programmed from the clean
+    (spare) array.
+  * shard-drop recovery is engine-level: re-shard via
+    ``distributed.fault.plan_elastic_mesh`` and requeue in-flight
+    requests through the scheduler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.abfp import (
+    PackedWeight,
+    packed_tile_fingerprint,
+    scale_storage_eps,
+)
+from repro.models.packing import DENSE_WEIGHT_NAMES
+
+FAULT_KINDS = ("stuck_col", "scale_drift", "shard_drop")
+
+# Drift factors are drawn from [0.75, 0.95] ∪ [1.05, 1.25]: far outside the
+# bf16 scale-storage quantum (~0.4% relative), so every injected drift is
+# detectable by the fingerprint probe at the default tolerance.
+_DRIFT_LO, _DRIFT_HI = 0.05, 0.25
+
+
+def drift_detect_rtol() -> float:
+    """Default detection tolerance: 4x the bf16 scale-storage quantum —
+    far below the smallest injected drift (5%), far above storage noise."""
+    return 4.0 * scale_storage_eps()
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Seeded fault-injection spec the engine turns into a concrete plan.
+
+    ``rate`` is the PER-TICK fault probability: each engine tick, one
+    fault event lands somewhere in the array (site uniform over the dense
+    weights, kind uniform over the enabled kinds) with probability
+    ``rate``.  When ``rate > 0`` the plan always contains at least one
+    event inside ``horizon`` — a sweep at 0.1% must still exercise the
+    machinery.  ``horizon`` bounds the pre-drawn schedule in ticks.
+    ``max_shard_drops`` caps whole-shard events per plan (a reshard
+    recompiles the jitted step — one per trace is plenty to exercise it).
+    """
+
+    rate: float = 0.01
+    kinds: Tuple[str, ...] = FAULT_KINDS
+    seed: int = 0
+    horizon: int = 512
+    max_cols_per_event: int = 2
+    max_tiles_per_event: int = 4
+    max_shard_drops: int = 1
+
+    def __post_init__(self):
+        unknown = set(self.kinds) - set(FAULT_KINDS)
+        if unknown:
+            raise ValueError(
+                f"unknown fault kinds {sorted(unknown)}; "
+                f"expected a subset of {FAULT_KINDS}")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1] (got {self.rate})")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    tick: int                       # engine tick at which the fault lands
+    kind: str                       # one of FAULT_KINDS
+    path: str                       # '/'-joined param path ('' = shard_drop)
+    cols: Tuple[int, ...] = ()      # stuck_col: logical output columns
+    tiles: Tuple[Tuple[int, int], ...] = ()  # scale_drift: (tile, col)
+    factors: Tuple[float, ...] = ()          # scale_drift: multipliers
+    shard: int = -1                 # shard_drop: model-axis shard index
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """A concrete, seeded fault trace: events sorted by tick."""
+
+    events: List[FaultEvent]
+    cfg: FaultConfig
+
+    def due(self, tick: int, cursor: int) -> Tuple[List[FaultEvent], int]:
+        """Events with ``event.tick <= tick`` starting at ``cursor``;
+        returns (events, new_cursor) — the engine keeps the cursor so each
+        event is applied exactly once."""
+        out = []
+        while cursor < len(self.events) and self.events[cursor].tick <= tick:
+            out.append(self.events[cursor])
+            cursor += 1
+        return out, cursor
+
+
+# ---------------------------------------------------------------------------
+# Fault sites: which param leaves can fault, addressed by path string
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSite:
+    path: str
+    packed: bool
+    n_cols: int         # logical (un-padded) output columns
+    n_padded: int       # storage columns (lane-aligned for packed)
+    n_tiles: int        # ABFP K-tiles (1 for float sites)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def fault_sites(params: Any) -> List[FaultSite]:
+    """Enumerate faultable dense-weight leaves, sorted by path for
+    determinism.  Packed leaves always qualify; float leaves qualify when
+    their name is a known dense-matmul weight (``models.packing``)."""
+    sites: List[FaultSite] = []
+
+    def visit(path, leaf):
+        p = _path_str(path)
+        if isinstance(leaf, PackedWeight):
+            sites.append(FaultSite(p, True, leaf.n_cols, leaf.n_padded,
+                                   leaf.num_tiles))
+        elif p.split("/")[-1] in DENSE_WEIGHT_NAMES \
+                and getattr(leaf, "ndim", 0) >= 2:
+            n = int(leaf.shape[-1])
+            sites.append(FaultSite(p, False, n, n, 1))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        visit, params, is_leaf=lambda x: isinstance(x, PackedWeight))
+    return sorted(sites, key=lambda s: s.path)
+
+
+# ---------------------------------------------------------------------------
+# Plan generation: one seeded RNG draws the whole trace
+# ---------------------------------------------------------------------------
+
+
+def make_fault_plan(params: Any, cfg: FaultConfig, tp: int = 1) -> FaultPlan:
+    """Draw a deterministic fault trace for ``params``.
+
+    Each tick faults with probability ``cfg.rate`` (site uniform over the
+    dense weights, kind uniform over the available kinds); when ``rate >
+    0`` at least one event is guaranteed within the horizon.
+    ``scale_drift`` applies to packed sites only; ``shard_drop`` fires at
+    most ``max_shard_drops`` times and targets a uniform model-axis shard
+    in [0, tp).
+    """
+    rng = np.random.default_rng(cfg.seed)
+    sites = fault_sites(params)
+    events: List[FaultEvent] = []
+    if not sites or cfg.rate <= 0.0:
+        return FaultPlan([], cfg)
+
+    shard_drops = 0
+    fault_ticks = list(np.flatnonzero(rng.random(cfg.horizon) < cfg.rate))
+    if not fault_ticks:
+        # rate > 0 must inject SOMETHING: pin one early event so even a
+        # short trace at the 0.1% sweep rate measures fault handling, not
+        # a lucky fault-free run.
+        fault_ticks = [min(8, cfg.horizon - 1)]
+    for tick in fault_ticks:
+        tick = int(tick)
+        site = sites[int(rng.integers(len(sites)))]
+        kinds = [k for k in cfg.kinds
+                 if not (k == "scale_drift" and not site.packed)]
+        if shard_drops >= cfg.max_shard_drops:
+            kinds = [k for k in kinds if k != "shard_drop"]
+        if not kinds:
+            continue
+        kind = kinds[int(rng.integers(len(kinds)))]
+        if kind == "stuck_col":
+            n = int(rng.integers(1, cfg.max_cols_per_event + 1))
+            cols = rng.choice(site.n_cols, size=min(n, site.n_cols),
+                              replace=False)
+            events.append(FaultEvent(tick, kind, site.path,
+                                     cols=tuple(int(c) for c in cols)))
+        elif kind == "scale_drift":
+            n = int(rng.integers(1, cfg.max_tiles_per_event + 1))
+            ts = rng.integers(0, site.n_tiles, size=n)
+            js = rng.integers(0, site.n_cols, size=n)
+            mag = rng.uniform(_DRIFT_LO, _DRIFT_HI, size=n)
+            sgn = rng.choice([-1.0, 1.0], size=n)
+            f = 1.0 + sgn * mag
+            pairs = tuple(sorted({(int(t), int(j))
+                                  for t, j in zip(ts, js)}))
+            events.append(FaultEvent(
+                tick, kind, site.path, tiles=pairs,
+                factors=tuple(float(v) for v in f[:len(pairs)])))
+        else:   # shard_drop
+            shard_drops += 1
+            events.append(FaultEvent(tick, kind, "",
+                                     shard=int(rng.integers(max(1, tp)))))
+    events.sort(key=lambda e: (e.tick, e.path, e.kind))
+    return FaultPlan(events, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Injection: sharding-preserving rewrites of the served operands
+# ---------------------------------------------------------------------------
+
+
+def _map_site(params: Any, path: str, fn) -> Any:
+    """Apply ``fn`` to the leaf at ``path``; all other leaves pass through."""
+
+    def one(p, leaf):
+        return fn(leaf) if _path_str(p) == path else leaf
+
+    return jax.tree_util.tree_map_with_path(
+        one, params, is_leaf=lambda x: isinstance(x, PackedWeight))
+
+
+def _zero_cols(leaf, cols: Sequence[int]):
+    idx = jnp.asarray(cols, jnp.int32)
+    if isinstance(leaf, PackedWeight):
+        return PackedWeight(
+            leaf.codes.at[..., idx].set(0),
+            leaf.scales.at[..., idx].set(0),
+            leaf.k, leaf.n_cols, leaf.tile_width, leaf.bits_w)
+    return leaf.at[..., idx].set(0)
+
+
+def inject_stuck_cols(params: Any, path: str, cols: Sequence[int]) -> Any:
+    """Stuck-at-zero output columns: codes AND scales zeroed (packed), or
+    the weight columns zeroed (float)."""
+    return _map_site(params, path, lambda leaf: _zero_cols(leaf, cols))
+
+
+def inject_scale_drift(params: Any, path: str,
+                       tiles: Sequence[Tuple[int, int]],
+                       factors: Sequence[float]) -> Any:
+    """Multiply the (tile, col) scales by their drift factors (bf16
+    round-trip through the storage dtype, like real conductance drift
+    re-read through the same DACs)."""
+    t = jnp.asarray([p[0] for p in tiles], jnp.int32)
+    j = jnp.asarray([p[1] for p in tiles], jnp.int32)
+    f = jnp.asarray(list(factors), jnp.float32)
+
+    def drift(leaf):
+        if not isinstance(leaf, PackedWeight):
+            raise ValueError(f"scale_drift targets PackedWeight (got {path})")
+        s32 = leaf.scales.astype(jnp.float32)
+        s32 = s32.at[..., t, j].multiply(f)
+        return PackedWeight(leaf.codes, s32.astype(leaf.scales.dtype),
+                            leaf.k, leaf.n_cols, leaf.tile_width, leaf.bits_w)
+
+    return _map_site(params, path, drift)
+
+
+def inject_shard_drop(params: Any, shard: int, tp: int,
+                      quant=None, mesh=None) -> Any:
+    """Zero the column slice owned by model-axis shard ``shard`` on every
+    weight that is column-sharded at this mesh (replicated weights survive
+    on the remaining chips).  ``tp <= 1`` (or no mesh) models a
+    single-array engine: the whole array of every site is lost."""
+    from repro.kernels.ops import tp_shardable
+
+    sites = {s.path for s in fault_sites(params)}
+
+    def one(p, leaf):
+        if _path_str(p) not in sites:
+            return leaf
+        if tp <= 1 or mesh is None:
+            return _zero_cols(leaf, list(range(
+                leaf.n_padded if isinstance(leaf, PackedWeight)
+                else leaf.shape[-1])))
+        if quant is not None and not tp_shardable(leaf, quant, mesh):
+            return leaf                     # replicated: survives the loss
+        width = (leaf.n_padded if isinstance(leaf, PackedWeight)
+                 else leaf.shape[-1]) // tp
+        cols = list(range(shard * width, (shard + 1) * width))
+        return _zero_cols(leaf, cols)
+
+    return jax.tree_util.tree_map_with_path(
+        one, params, is_leaf=lambda x: isinstance(x, PackedWeight))
+
+
+def apply_event(params: Any, ev: FaultEvent, *, tp: int = 1,
+                quant=None, mesh=None) -> Any:
+    if ev.kind == "stuck_col":
+        return inject_stuck_cols(params, ev.path, ev.cols)
+    if ev.kind == "scale_drift":
+        return inject_scale_drift(params, ev.path, ev.tiles, ev.factors)
+    if ev.kind == "shard_drop":
+        return inject_shard_drop(params, ev.shard, tp, quant=quant, mesh=mesh)
+    raise ValueError(f"unknown fault kind {ev.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Detection: fingerprint probes against the healthy baseline
+# ---------------------------------------------------------------------------
+
+
+def site_fingerprint(params: Any, site: FaultSite) -> np.ndarray:
+    """Per-(tile, col) probe response of one site, as host f32.
+
+    Packed: ``core.abfp.packed_tile_fingerprint`` (leading batch axes are
+    summed away — a fault on any expert/group shows in the reduction).
+    Float: column L1 norm, shaped (1, N) so the (tile, col) detection code
+    below is uniform."""
+    leaf = _get_site(params, site.path)
+    if isinstance(leaf, PackedWeight):
+        fp = packed_tile_fingerprint(leaf)
+        fp = fp.reshape(-1, *fp.shape[-2:]).sum(axis=0)     # (T, Np)
+        return np.asarray(fp, np.float32)
+    w = jnp.abs(leaf.astype(jnp.float32))
+    return np.asarray(w.sum(axis=tuple(range(leaf.ndim - 1)))[None, :],
+                      np.float32)
+
+
+def _get_site(params: Any, path: str):
+    found = []
+
+    def one(p, leaf):
+        if _path_str(p) == path:
+            found.append(leaf)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        one, params, is_leaf=lambda x: isinstance(x, PackedWeight))
+    if not found:
+        raise KeyError(f"no param leaf at {path!r}")
+    return found[0]
+
+
+@dataclasses.dataclass
+class Detection:
+    """One detection round's verdict for one site."""
+
+    path: str
+    stuck_cols: Tuple[int, ...]                 # dead columns
+    drifted: Tuple[Tuple[int, int], ...]        # drifted (tile, col)
+
+    @property
+    def clean(self) -> bool:
+        return not self.stuck_cols and not self.drifted
+
+
+def detect_site(baseline: np.ndarray, current: np.ndarray,
+                rtol: Optional[float] = None) -> Detection:
+    """Compare fingerprints: exact-zero columns against a nonzero baseline
+    are stuck; other relative deviations beyond ``rtol`` are drift."""
+    rtol = drift_detect_rtol() if rtol is None else rtol
+    base = np.maximum(baseline, 1e-30)
+    rel = np.abs(current - baseline) / base
+    # Stuck = every tile that HAD signal now reads exactly zero (tiles whose
+    # baseline was already zero carry no information either way).
+    dead_or_silent = (current == 0.0) | (baseline == 0.0)
+    col_alive_base = (baseline > 0.0).any(axis=0)
+    stuck = np.flatnonzero(dead_or_silent.all(axis=0) & col_alive_base)
+    stuck_set = set(int(c) for c in stuck)
+    drifted = [(int(t), int(j)) for t, j in zip(*np.nonzero(rel > rtol))
+               if j not in stuck_set]
+    return Detection("", tuple(sorted(stuck_set)), tuple(sorted(drifted)))
+
+
+def fingerprint_baselines(params: Any) -> Dict[str, np.ndarray]:
+    """Healthy fingerprints for every fault site (captured at engine init,
+    before any injection)."""
+    return {s.path: site_fingerprint(params, s) for s in fault_sites(params)}
+
+
+# ---------------------------------------------------------------------------
+# Repair: restore from the clean (hot-spare) copy, surgically
+# ---------------------------------------------------------------------------
+
+
+def repair_stuck(params: Any, clean: Any, path: str,
+                 cols: Sequence[int]) -> Any:
+    """Remap stuck columns onto the replicated hot copy: re-program codes +
+    scales (or float columns) for exactly those columns."""
+    src = _get_site(clean, path)
+    idx = jnp.asarray(list(cols), jnp.int32)
+
+    def fix(leaf):
+        if isinstance(leaf, PackedWeight):
+            return PackedWeight(
+                leaf.codes.at[..., idx].set(src.codes[..., idx]),
+                leaf.scales.at[..., idx].set(src.scales[..., idx]),
+                leaf.k, leaf.n_cols, leaf.tile_width, leaf.bits_w)
+        return leaf.at[..., idx].set(src[..., idx])
+
+    return _map_site(params, path, fix)
+
+
+def repair_drift(params: Any, clean: Any, path: str,
+                 tiles: Sequence[Tuple[int, int]]) -> Any:
+    """Re-quantize-on-drift: restore ONLY the drifted (tile, col) scales
+    from the clean packed copy — codes are untouched, healthy tiles keep
+    their arrays exactly (for weights quantized once at engine init the
+    clean copy is by construction the re-quantization of the float
+    master)."""
+    src = _get_site(clean, path)
+    t = jnp.asarray([p[0] for p in tiles], jnp.int32)
+    j = jnp.asarray([p[1] for p in tiles], jnp.int32)
+
+    def fix(leaf):
+        if not isinstance(leaf, PackedWeight):
+            raise ValueError(f"repair_drift targets PackedWeight (got {path})")
+        return PackedWeight(
+            leaf.codes,
+            leaf.scales.at[..., t, j].set(src.scales[..., t, j]),
+            leaf.k, leaf.n_cols, leaf.tile_width, leaf.bits_w)
+
+    return _map_site(params, path, fix)

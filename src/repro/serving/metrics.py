@@ -39,6 +39,10 @@ class RequestMetrics:
     finish_time: Optional[float] = None
     n_tokens: int = 0
     rejected: bool = False
+    timed_out: bool = False     # deadline expired (queued or in-flight)
+    corrupted: bool = False     # some token was generated while an
+                                # injected fault was active and unrepaired
+    requeues: int = 0           # times evicted + requeued by fault recovery
 
     @property
     def ttft(self) -> Optional[float]:
@@ -92,11 +96,26 @@ class ServingMetrics:
         self.capacity = capacity
         self.reset()
 
+    #: Optional ``distributed.fault.StragglerMonitor`` the engine wires in;
+    #: ``summary()`` surfaces its escalation state when present.
+    straggler = None
+
     def reset(self) -> None:
         self.requests: Dict[int, RequestMetrics] = {}
         self.ticks = 0
         self._utilization: List[float] = []
         self._queue_depth: List[int] = []
+        # Fault-tolerance counters (serving.faults / engine recovery).
+        self.faults: Dict[str, int] = {
+            "injected": 0,
+            "injected_stuck_col": 0,
+            "injected_scale_drift": 0,
+            "injected_shard_drop": 0,
+            "detected": 0,
+            "cols_remapped": 0,
+            "tiles_requantized": 0,
+            "reshards": 0,
+        }
 
     # -- event hooks (engine-facing) --------------------------------------
     def _req(self, uid: int) -> RequestMetrics:
@@ -139,6 +158,41 @@ class ServingMetrics:
     def on_finish(self, uid: int, now: float) -> None:
         self._req(uid).finish_time = now
 
+    def on_timeout(self, uid: int, now: float) -> None:
+        """Deadline expired: the request is cancelled (queued or in-flight),
+        never finished — it counts toward conservation as ``timed_out``."""
+        self._req(uid).timed_out = True
+
+    def on_corrupted(self, uid: int) -> None:
+        """A token was generated while an injected fault was active and
+        unrepaired: the request's output cannot be trusted.  Corrupted
+        requests still complete (degrade, don't crash) but are excluded
+        from SLO goodput by default."""
+        self._req(uid).corrupted = True
+
+    def on_requeue(self, uid: int) -> None:
+        """Fault recovery evicted this in-flight request and requeued it
+        with state reset; its generation restarts from scratch, so the
+        token-level timestamps (and any corruption from the discarded
+        attempt) are cleared while arrival/admit history is kept."""
+        r = self._req(uid)
+        r.requeues += 1
+        r.first_token_time = None
+        r.finish_time = None
+        r.n_tokens = 0
+        r.corrupted = False
+
+    def on_fault(self, kind: str) -> None:
+        self.faults["injected"] += 1
+        self.faults[f"injected_{kind}"] += 1
+
+    def on_detected(self, n: int) -> None:
+        self.faults["detected"] += int(n)
+
+    def on_repair(self, action: str, n: int = 1) -> None:
+        """``action`` in {cols_remapped, tiles_requantized, reshards}."""
+        self.faults[action] += int(n)
+
     def on_tick(self, now: float, live: int, capacity: int,
                 queue_depth: int) -> None:
         self.ticks += 1
@@ -151,10 +205,18 @@ class ServingMetrics:
                 if r.finish_time is not None]
 
     def goodput(self, slo_ttft: float,
-                duration: Optional[float] = None) -> Optional[float]:
+                duration: Optional[float] = None,
+                include_corrupted: bool = False) -> Optional[float]:
         """Requests that finished with TTFT <= ``slo_ttft``, per clock unit.
         ``duration`` defaults to the span from earliest arrival to last
-        finish."""
+        finish.
+
+        Corrupted requests (tokens generated under an active, unrepaired
+        fault) are NOT good output and are excluded by default;
+        ``include_corrupted=True`` gives the DEGRADED-MODE goodput — how
+        fast the engine pushes requests out regardless of trustworthiness.
+        The gap between the two is the cost of serving through faults
+        without recovery."""
         fin = self.finished()
         if not fin:
             return None
@@ -165,20 +227,51 @@ class ServingMetrics:
         if duration <= 0:
             return None
         good = sum(1 for r in fin
-                   if r.ttft is not None and r.ttft <= slo_ttft)
+                   if r.ttft is not None and r.ttft <= slo_ttft
+                   and (include_corrupted or not r.corrupted))
         return good / duration
+
+    def conservation(self) -> Dict:
+        """The invariant every fault trace must preserve: after drain,
+        ``submitted == completed + rejected + timed_out`` — a request can
+        be evicted and requeued any number of times, but it is never lost.
+        (In-flight/queued requests make the identity a ``<=`` mid-run.)"""
+        vals = self.requests.values()
+        completed = sum(1 for r in vals if r.finish_time is not None)
+        rejected = sum(1 for r in vals if r.rejected)
+        timed_out = sum(1 for r in vals if r.timed_out)
+        return {
+            "submitted": len(self.requests),
+            "completed": completed,
+            "rejected": rejected,
+            "timed_out": timed_out,
+            "ok": len(self.requests) == completed + rejected + timed_out,
+        }
 
     def summary(self, percentiles: Sequence[int] = (50, 90, 99)) -> Dict:
         fin = self.finished()
         util = self._utilization
         depth = self._queue_depth
+        cons = self.conservation()
         return {
             "requests": {
                 "submitted": len(self.requests),
                 "finished": len(fin),
-                "rejected": sum(1 for r in self.requests.values()
-                                if r.rejected),
+                "rejected": cons["rejected"],
+                "timed_out": cons["timed_out"],
+                "requeued": sum(1 for r in self.requests.values()
+                                if r.requeues > 0),
+                "corrupted": sum(1 for r in self.requests.values()
+                                 if r.corrupted),
+                "conservation_ok": cons["ok"],
             },
+            "faults": dict(self.faults),
+            "straggler": (
+                None if self.straggler is None else {
+                    "escalation": self.straggler.escalation(),
+                    "flagged": self.straggler.flagged,
+                    "deadline_s": self.straggler.deadline(),
+                }),
             "ttft": percentile_summary((r.ttft for r in fin), percentiles),
             "tpot": percentile_summary((r.tpot for r in fin), percentiles),
             "e2e": percentile_summary((r.e2e for r in fin), percentiles),

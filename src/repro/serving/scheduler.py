@@ -60,6 +60,25 @@ class Scheduler(abc.ABC):
         """Earliest arrival among queued requests (for idle clock jumps)."""
         return min((r.arrival_time for r in self._queue), default=None)
 
+    def requeue(self, req: "Request") -> None:
+        """Re-add an in-flight request evicted by fault recovery (its slot
+        state died with a shard).  ``arrival_time`` is preserved, so
+        arrival-ordered policies re-admit it ahead of younger traffic —
+        a recovered request never goes to the back of the line."""
+        self.add(req)
+
+    def expire(self, now: float) -> List["Request"]:
+        """Remove and return queued requests whose deadline has passed —
+        they will never be admitted, so the engine marks them timed out
+        instead of letting them rot in the queue."""
+        out = [r for r in self._queue
+               if getattr(r, "deadline", None) is not None
+               and r.deadline <= now]
+        for r in out:
+            self._queue.remove(r)
+            self._order.pop(id(r))
+        return out
+
     def pop(self, now: float) -> Optional["Request"]:
         """Remove and return the next request to admit, or None if nothing
         has arrived by ``now``."""

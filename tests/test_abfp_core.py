@@ -262,3 +262,26 @@ def test_percentile_100_equals_max():
     np.testing.assert_array_equal(
         np.asarray(abfp.abfp_matmul(x, w, cfg_max)),
         np.asarray(abfp.abfp_matmul(x, w, cfg_100)))
+
+
+def test_packed_output_error_bound_envelopes_response():
+    """The scale-statistic bound is a true envelope: no unit-scale input
+    drives any output column above it, so a probe reading ABOVE the bound
+    is unambiguous corruption (serving.faults uses the converse, a zero
+    fingerprint, for dead columns)."""
+    cfg = QuantConfig(tile_width=32, gain=4.0, noise_lsb=0.5,
+                      out_dtype=jnp.float32)
+    w = jax.random.laplace(jax.random.PRNGKey(3), (200, 48)) * 0.08
+    pw = abfp.pack_abfp_weight(w, cfg)
+    bound = abfp.packed_output_error_bound(pw, cfg)
+    assert bound.shape == (pw.n_padded,)
+    x = jnp.clip(jax.random.normal(jax.random.PRNGKey(4), (16, 200)), -1, 1)
+    y = abfp_matmul_ref(x, w, cfg, key=jax.random.PRNGKey(5))
+    assert bool(jnp.all(jnp.abs(y) <= bound[: w.shape[1]] + 1e-6))
+    # The bound tracks the programmed scales linearly: doubling every tile
+    # scale (a gross drift) exactly doubles the envelope.
+    drifted = jax.tree.map(lambda a: a, pw)
+    object.__setattr__(drifted, "scales", pw.scales * 2)
+    np.testing.assert_allclose(np.asarray(
+        abfp.packed_output_error_bound(drifted, cfg)),
+        2.0 * np.asarray(bound), rtol=1e-6)

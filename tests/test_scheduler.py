@@ -133,7 +133,9 @@ def test_metrics_hand_computed():
     assert r.e2e == 5.0
     assert r.tpot == pytest.approx((6.0 - 3.0) / 2)   # 2 inter-token gaps
     s = m.summary()
-    assert s["requests"] == {"submitted": 1, "finished": 1, "rejected": 0}
+    assert s["requests"] == {"submitted": 1, "finished": 1, "rejected": 0,
+                             "timed_out": 0, "requeued": 0, "corrupted": 0,
+                             "conservation_ok": True}
     assert s["ttft"]["p50"] == 2.0 and s["ttft"]["n"] == 1
     # goodput: 1 request over the arrival->finish span of 5 ticks
     assert m.goodput(slo_ttft=2.0) == pytest.approx(1 / 5)

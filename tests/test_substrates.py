@@ -211,6 +211,55 @@ def test_elastic_plan():
     assert plan.changed and plan.lost_hosts == 16
 
 
+def test_elastic_plan_raises_when_chips_below_model_parallel():
+    with pytest.raises(RuntimeError):
+        fault.plan_elastic_mesh(chips_available=8, model_parallel=16,
+                                old_shape=(1, 16))
+
+
+def test_elastic_plan_lost_hosts_clamped_at_zero():
+    # More chips than the old mesh used (scale-UP replan): nothing lost.
+    plan = fault.plan_elastic_mesh(chips_available=20, model_parallel=4,
+                                   old_shape=(4, 4))
+    assert plan.new_shape == (5, 4)
+    assert plan.lost_hosts == 0
+
+
+def test_plan_recovery_mesh_degrades_model_axis():
+    # plan_elastic_mesh would raise at 6 chips under mp=8; the recovery
+    # variant narrows the model axis instead (weights get re-programmed
+    # from the clean master anyway).
+    plan = fault.plan_recovery_mesh(chips_available=6, model_parallel=8,
+                                    old_shape=(1, 8))
+    assert plan.new_shape == (1, 6)
+    with pytest.raises(RuntimeError):
+        fault.plan_recovery_mesh(chips_available=0, model_parallel=4,
+                                 old_shape=(1, 4))
+
+
+def test_straggler_escalation_thresholds():
+    m = fault.StragglerMonitor()
+    assert m.escalation() == "log"           # no breaches yet
+    m.flagged = 2
+    assert m.escalation() == "log"           # <= 2: log only
+    m.flagged = 3
+    assert m.escalation() == "reslice"
+    m.flagged = 5
+    assert m.escalation() == "reslice"       # <= 5: reslice
+    m.flagged = 6
+    assert m.escalation() == "remesh"
+
+
+def test_straggler_deadline_needs_five_samples():
+    m = fault.StragglerMonitor(k=3.0)
+    for _ in range(4):
+        assert m.deadline() is None          # median model not warm yet
+        assert not m.observe(1.0)            # never a breach without one
+    assert m.deadline() is None              # 4 samples: still None
+    m.observe(1.0)
+    assert m.deadline() == pytest.approx(3.0)
+
+
 # ---------------------------------------------------------------------------
 # Serving engine
 # ---------------------------------------------------------------------------
