@@ -16,7 +16,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: lint test-fast test test-slow test-dist test-faults bench bench-smoke bench-serving bench-faults
+.PHONY: lint test-fast test test-slow test-dist test-faults test-overload bench bench-smoke bench-serving bench-faults bench-overload
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \
@@ -73,3 +73,15 @@ bench-faults:
 test-faults:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 		$(PY) -m pytest -q -m fault
+
+# Overload-robustness suite: paged-pool preemption/resume, admission
+# backpressure, degraded modes, tenant quotas (tests/test_pages.py +
+# the randomized overload-trace property test).
+test-overload:
+	$(PY) -m pytest -q -m overload
+
+# Capacity gate (paged vs unpaged max-concurrency at a fixed KV budget)
+# + overload sweep (1.2-2.0x service rate; paged+preemption goodput must
+# beat the unpaged baseline at every point) -> BENCH_serving_overload.json.
+bench-overload:
+	$(PY) benchmarks/bench_serving.py --overload-only

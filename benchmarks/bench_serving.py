@@ -163,6 +163,10 @@ def bench_open_loop(params, mcfg, *, mode, load, capacity, prompt_len,
 
 FAULT_RATES = (0.001, 0.01, 0.05)
 
+# Stamped into every BENCH json this script writes; bump when row fields
+# change shape so downstream tooling can dispatch on it.
+SCHEMA_VERSION = 2
+
 
 def bench_fault_sweep(params, mcfg, *, mode, seed,
                       rates=FAULT_RATES, n_requests=24) -> list:
@@ -249,6 +253,148 @@ def fault_gate(rows) -> bool:
             r["goodput_per_tick"] or 0.0)
     return all(pair.get(True, 0.0) > pair.get(False, 0.0)
                for pair in by_rate.values())
+
+
+# ---------------------------------------------------------------------------
+# Overload robustness: paged capacity gate + goodput-under-overload sweep
+# ---------------------------------------------------------------------------
+
+OVERLOAD_LOADS = (1.2, 1.6, 2.0)
+
+
+def _drive_trace(eng, reqs):
+    """Arrival-driven serve: submit each request only once the simulated
+    clock reaches its arrival (so admission backpressure sees true queue
+    state), then drain.  Returns the finished list."""
+    pending = sorted(reqs, key=lambda r: r.arrival_time)
+    finished = []
+    while pending or len(eng.scheduler) \
+            or any(s is not None for s in eng.slots) or eng._returned:
+        while pending and pending[0].arrival_time <= eng.now:
+            r = pending.pop(0)
+            if not eng.submit(r):
+                finished.append(r)
+        got = eng.poll()
+        finished.extend(got)
+        if not got and pending and not len(eng.scheduler) \
+                and all(s is None for s in eng.slots):
+            eng.now = pending[0].arrival_time    # idle: jump to next arrival
+    return finished
+
+
+def bench_capacity_gate(params, mcfg, *, seed) -> dict:
+    """Max concurrent requests at a FIXED KV budget of 256 token-slots:
+    unpaged spends it as 4 slots x max_len 64; paged spends the same 256
+    tokens as a 16-page x 16-token pool shared by 12 slots, so short
+    requests (~1 page each) stack 3x deeper.  Simulated clock; the gate is
+    STRICT (paged > unpaged)."""
+    n, prompt_len, max_new = 16, 8, 4
+
+    def _measure(**ekw):
+        eng = ServingEngine(params, mcfg, quant=_quant("float"), seed=seed,
+                            chunked=True, prefill_chunks=(4, 8), **ekw)
+        reqs = _workload(mcfg, n, prompt_len, max_new, seed=seed)
+        for r in reqs:
+            r.arrival_time = 0.0
+        peak = 0
+        for r in reqs:
+            eng.submit(r)
+        while len(eng.scheduler) or any(s is not None for s in eng.slots):
+            eng.poll()
+            peak = max(peak, sum(s is not None for s in eng.slots))
+        cons = eng.metrics.conservation()
+        assert cons["ok"], cons
+        return peak, eng.ticks
+
+    unpaged_peak, unpaged_ticks = _measure(capacity=4, max_len=64)
+    paged_peak, paged_ticks = _measure(capacity=12, max_len=64, paged=True,
+                                       page_size=16, pool_pages=16)
+    return {"kv_budget_tokens": 256, "prompt_len": prompt_len,
+            "max_new": max_new, "n_requests": n,
+            "unpaged": {"capacity": 4, "max_concurrent": unpaged_peak,
+                        "ticks": unpaged_ticks},
+            "paged": {"capacity": 12, "page_size": 16, "pool_pages": 16,
+                      "max_concurrent": paged_peak, "ticks": paged_ticks},
+            "pass": bool(paged_peak > unpaged_peak)}
+
+
+def bench_overload_sweep(params, mcfg, *, seed, loads=OVERLOAD_LOADS,
+                         n_requests=32) -> list:
+    """Goodput at 1.2-2.0x the calibrated service rate, robust (paged +
+    preemption + admission watermarks, 12 slots on the same 256-token KV
+    budget) vs the unpaged shed-nothing seed engine (4 slots).  Simulated
+    clock, deterministic arrivals per seed; TTFT SLO fixed by a fault-free
+    closed-loop calibration of the SEED engine.  Every cell asserts
+    request conservation (extended with preemption accounting)."""
+    # 20-token requests (2 pages of 16): 12 robust slots want up to 24
+    # pages against a 16-page pool, so page pressure and preemption are
+    # actually exercised at the high load points.
+    prompt_len, max_new, max_len = 8, 12, 64
+    chunks = (4, 8)
+    base_kw = dict(quant=_quant("float"), seed=seed, chunked=True,
+                   prefill_chunks=chunks, max_len=max_len)
+
+    # Calibrate the seed engine closed-loop: service rate in req/tick and
+    # the TTFT SLO (3x unloaded p50) every cell is judged against.
+    eng = ServingEngine(params, mcfg, capacity=4, **base_kw)
+    reqs = _workload(mcfg, 8, prompt_len, max_new, seed=seed + 1)
+    for r in reqs:
+        r.arrival_time = 0.0
+    t0 = eng.ticks
+    eng.run(reqs)
+    service_rate = 8 / max(1, eng.ticks - t0)       # req per tick
+    slo_ttft = 3.0 * eng.metrics.summary()["ttft"]["p50"]
+
+    rows = []
+    for load in loads:
+        rate = load * service_rate
+        for robust in (False, True):
+            if robust:
+                eng = ServingEngine(params, mcfg, capacity=12, paged=True,
+                                    page_size=16, pool_pages=16,
+                                    queue_watermark=3 * 12, **base_kw)
+            else:
+                eng = ServingEngine(params, mcfg, capacity=4, **base_kw)
+            rng = np.random.default_rng(seed + int(load * 100))
+            arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+            reqs = [Request(uid=i,
+                            prompt=rng.integers(1, mcfg.vocab_size,
+                                                prompt_len).tolist(),
+                            max_new_tokens=max_new,
+                            arrival_time=float(arrivals[i]))
+                    for i in range(n_requests)]
+            _drive_trace(eng, reqs)
+            cons = eng.metrics.conservation()
+            assert cons["ok"] and cons["preempt_ok"], (load, robust, cons)
+            s = eng.metrics.summary()
+            good = eng.metrics.goodput(slo_ttft)
+            rows.append({
+                "load": load, "robust": robust,
+                "arrival_rate_per_tick": round(rate, 4),
+                "slo_ttft_ticks": round(slo_ttft, 2),
+                "goodput_per_tick": None if good is None else round(good, 4),
+                "finished": s["requests"]["finished"],
+                "shed": s["requests"]["shed"],
+                "preempted": s["requests"]["preempted"],
+                "resumed": s["requests"]["resumed"],
+                "ttft_p50": (None if s["ttft"]["p50"] is None
+                             else round(s["ttft"]["p50"], 2)),
+                "max_queue_depth": s["queue_depth"]["max"],
+                "conservation_ok": cons["ok"],
+                "ticks": s["ticks"],
+            })
+    return rows
+
+
+def overload_gate(rows) -> bool:
+    """Robust (paged+preemption+backpressure) goodput must be >= the
+    shed-nothing seed at EVERY load point."""
+    by_load = {}
+    for r in rows:
+        by_load.setdefault(r["load"], {})[r["robust"]] = (
+            r["goodput_per_tick"] or 0.0)
+    return all(pair.get(True, 0.0) >= pair.get(False, 0.0)
+               for pair in by_load.values())
 
 
 # ---------------------------------------------------------------------------
@@ -349,6 +495,19 @@ def main() -> None:
                          "sweep (default 0.001,0.01,0.05)")
     ap.add_argument("--no-fault-sweep", action="store_true",
                     help="skip the fault sweep on full runs")
+    ap.add_argument("--overload-only", action="store_true",
+                    help="run ONLY the paged capacity gate + the goodput-"
+                         "under-overload sweep and write "
+                         "BENCH_serving_overload.json; exits nonzero when "
+                         "paged does not beat unpaged concurrency at the "
+                         "fixed KV budget or robust goodput drops below "
+                         "the seed at any load (the CI overload gate)")
+    ap.add_argument("--overload-loads", default=None,
+                    help="comma-separated overload multiples of the "
+                         "calibrated service rate (default 1.2,1.6,2.0)")
+    ap.add_argument("--no-overload-sweep", action="store_true",
+                    help="skip the capacity gate + overload sweep on "
+                         "full runs")
     args = ap.parse_args()
 
     if args.mesh_one:
@@ -377,6 +536,7 @@ def main() -> None:
             root = Path(__file__).resolve().parent.parent
             out = str(root / "BENCH_serving_faults.json")
         Path(out).write_text(json.dumps({
+            "schema_version": SCHEMA_VERSION,
             "benchmark": "serving_fault_sweep",
             "arch": args.arch, "reduced": True,
             "backend": jax.default_backend(),
@@ -391,6 +551,50 @@ def main() -> None:
                   "beat recovery-off at every rate")
             sys.exit(1)
         print("[bench_serving] fault gate OK")
+        return
+
+    overload_loads = (tuple(float(x) for x in args.overload_loads.split(","))
+                      if args.overload_loads else OVERLOAD_LOADS)
+    if args.overload_only:
+        mcfg = smoke_config(args.arch)
+        params = init_params(jax.random.PRNGKey(args.seed), mcfg)
+        print(f"[bench_serving] overload only: loads={overload_loads}")
+        cap = bench_capacity_gate(params, mcfg, seed=args.seed)
+        print(f"  capacity @ {cap['kv_budget_tokens']}-token KV budget: "
+              f"unpaged {cap['unpaged']['max_concurrent']} "
+              f"-> paged {cap['paged']['max_concurrent']} concurrent "
+              f"({'OK' if cap['pass'] else 'FAIL'})")
+        over_rows = bench_overload_sweep(params, mcfg, seed=args.seed,
+                                         loads=overload_loads)
+        for r in over_rows:
+            print(f"  load {r['load']:3.1f}x "
+                  f"{'robust' if r['robust'] else 'seed  '} "
+                  f"goodput {r['goodput_per_tick']} "
+                  f"ttft p50 {r['ttft_p50']}  shed {r['shed']} "
+                  f"preempted {r['preempted']} qdepth<= "
+                  f"{r['max_queue_depth']}")
+        ok = cap["pass"] and overload_gate(over_rows)
+        out = args.out
+        if out is None:
+            root = Path(__file__).resolve().parent.parent
+            out = str(root / "BENCH_serving_overload.json")
+        Path(out).write_text(json.dumps({
+            "schema_version": SCHEMA_VERSION,
+            "benchmark": "serving_overload",
+            "arch": args.arch, "reduced": True,
+            "backend": jax.default_backend(),
+            "capacity_gate": cap,
+            "overload_sweep": over_rows,
+            "gate": {"pass": bool(ok),
+                     "metric": "paged capacity > unpaged AND robust "
+                               "goodput >= seed at every load",
+                     "loads": list(overload_loads)},
+        }, indent=2) + "\n")
+        print(f"[bench_serving] wrote {out}")
+        if not ok:
+            print("[bench_serving] overload gate FAIL")
+            sys.exit(1)
+        print("[bench_serving] overload gate OK")
         return
 
     if args.smoke:
@@ -460,8 +664,20 @@ def main() -> None:
             print("[bench_serving] WARNING: recovery-on did not beat "
                   "recovery-off at every fault rate")
 
+    cap_row, over_rows = None, []
+    if not args.smoke and not args.no_overload_sweep:
+        print("[bench_serving] capacity gate + overload sweep "
+              "(simulated clock)")
+        cap_row = bench_capacity_gate(params, mcfg, seed=args.seed)
+        over_rows = bench_overload_sweep(params, mcfg, seed=args.seed,
+                                         loads=overload_loads)
+        if not (cap_row["pass"] and overload_gate(over_rows)):
+            print("[bench_serving] WARNING: overload gate failed "
+                  "(capacity or goodput regression)")
+
     gate_ok = (speedups.get("float", 1.0) >= 1.0)
     result = {
+        "schema_version": SCHEMA_VERSION,
         "benchmark": "serving_smoke" if args.smoke else "serving_ttft",
         "arch": args.arch, "reduced": True,
         "prompt_len": args.prompt_len, "capacity": args.capacity,
@@ -471,6 +687,8 @@ def main() -> None:
         "open_loop": open_rows,
         "mesh_sweep": mesh_rows,
         "fault_sweep": fault_rows,
+        "capacity_gate": cap_row,
+        "overload_sweep": over_rows,
     }
     if args.smoke:
         # Machine-readable gate verdict: CI uploads this artifact, so the

@@ -304,6 +304,11 @@ def serving_state_spec_tree(state: Pytree, mesh: Mesh) -> Pytree:
 
     def one(path, leaf):
         names = _path_names(path)
+        if names[-1].endswith("_pages"):
+            # Paged KV pools are GLOBAL (leading axis is the page pool, not
+            # the slot batch): fully replicated so any data shard can gather
+            # any page through its table rows.
+            return P(*([None] * leaf.ndim))
         stacked = "groups" in names
         nd = leaf.ndim - (1 if stacked else 0)
         if nd <= 0:

@@ -177,6 +177,37 @@ def main() -> None:
                          "baseline for the goodput comparison)")
     ap.add_argument("--detect-every", type=int, default=4,
                     help="fingerprint-probe cadence in engine ticks")
+    # Paged KV pool + overload robustness (repro.serving.pages).
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from a paged KV pool (fixed pages aligned "
+                         "to the ABFP tile, slot->page-table indirection, "
+                         "copy-on-write prefix sharing) instead of "
+                         "per-slot max_len strips")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page (default: the quant tile "
+                         "width, or min(16, max_len) in float mode)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="total pages in the shared pool (default: "
+                         "capacity * ceil(max_len / page_size) — the "
+                         "unpaged footprint)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable cross-request prefix page sharing")
+    ap.add_argument("--no-preemption", action="store_true",
+                    help="disable evict-to-pool preemption under page "
+                         "saturation (victims then wait instead)")
+    ap.add_argument("--queue-watermark", type=int, default=None,
+                    help="shed newly arrived requests once the arrived "
+                         "queue depth reaches this (backpressure; shed "
+                         "requests carry a retry_after hint)")
+    ap.add_argument("--page-watermarks", default="0.85,0.5",
+                    help="hi,lo pool-pressure fractions: degraded mode "
+                         "enters at hi and exits at lo (hysteresis)")
+    ap.add_argument("--degraded-max-new", type=int, default=None,
+                    help="cap max_new_tokens for admissions made while "
+                         "degraded (graceful degradation)")
+    ap.add_argument("--tenant-quota", type=int, default=None,
+                    help="max pool pages a single tenant may hold "
+                         "(projected footprint; noisy-neighbor isolation)")
     ap.add_argument("--deadline", type=float, default=None,
                     help="per-request deadline in ticks after arrival; "
                          "expired requests are cancelled and counted "
@@ -217,6 +248,17 @@ def main() -> None:
         print(f"[serve] fault injection: rate={args.fault_rate}/tick, "
               f"kinds={args.fault_kinds}, seed={args.fault_seed}, "
               f"recovery={'off' if args.no_recovery else 'on'}")
+    try:
+        wm_hi, wm_lo = (float(v) for v in args.page_watermarks.split(","))
+    except ValueError:
+        raise SystemExit(f"--page-watermarks expects 'hi,lo' "
+                         f"(got {args.page_watermarks!r})")
+    if args.paged:
+        print(f"[serve] paged KV pool: page_size="
+              f"{args.page_size or 'auto'}, pool_pages="
+              f"{args.pool_pages or 'auto'}, prefix_cache="
+              f"{not args.no_prefix_cache}, preemption="
+              f"{not args.no_preemption}, watermarks=({wm_hi}, {wm_lo})")
     eng = ServingEngine(params, mcfg, capacity=args.capacity,
                         max_len=args.max_len, quant=quant, seed=args.seed,
                         chunked=not args.no_chunked,
@@ -226,7 +268,16 @@ def main() -> None:
                         mesh=mesh,
                         faults=faults,
                         recovery=not args.no_recovery,
-                        detect_every=args.detect_every)
+                        detect_every=args.detect_every,
+                        paged=args.paged,
+                        page_size=args.page_size,
+                        pool_pages=args.pool_pages,
+                        prefix_cache=not args.no_prefix_cache,
+                        preemption=(False if args.no_preemption else None),
+                        queue_watermark=args.queue_watermark,
+                        page_watermarks=(wm_hi, wm_lo),
+                        degraded_max_new=args.degraded_max_new,
+                        tenant_quota=args.tenant_quota)
     rng = np.random.default_rng(args.seed)
 
     open_loop = args.arrival_rate is not None or args.trace is not None
@@ -289,6 +340,16 @@ def main() -> None:
         print(f"[serve] timed_out {req_s['timed_out']}, requeued "
               f"{req_s['requeued']}, corrupted {req_s['corrupted']}, "
               f"conservation_ok {cons['ok']}")
+    if args.paged:
+        pool = s["pool"]
+        cons = eng.metrics.conservation()
+        print(f"[serve] pool: pressure mean {pool['pressure_mean']:.2f} / "
+              f"max {pool['pressure_max']:.2f}, prefix hits "
+              f"{pool['prefix_hits']}, cow copies {pool['cow_copies']}, "
+              f"degraded ticks {pool['degraded_ticks']}")
+        print(f"[serve] overload: shed {req_s['shed']}, preempted "
+              f"{req_s['preempted']}, resumed {req_s['resumed']}, "
+              f"preempt_ok {cons['preempt_ok']}")
     if args.metrics_out:
         eng.metrics.to_json(args.metrics_out, policy=args.policy,
                             quant=args.quant,

@@ -541,6 +541,117 @@ def chunk_append_attend(q: Array, k: Array, v: Array, kv_cache: dict,
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache: pool + page-table indirection (serving.pages owns the
+# host-side allocator; these are the device-side scatter/gather paths).
+# ---------------------------------------------------------------------------
+
+
+def _paged_view(pool: Array, table: Array) -> Array:
+    """Gather a dense per-slot cache view out of the page pool.
+
+    pool: (NP, PS, ...); table: (B, MP) int32 physical page per logical
+    page (sentinel NP for unallocated entries — the gather clamps, and the
+    garbage it reads sits at positions >= the slot's length, masked to
+    -1e30 by the attention cores exactly like unpaged out-of-range slots).
+    Returns (B, MP*PS, ...)."""
+    np_ = pool.shape[0]
+    g = pool[jnp.clip(table, 0, np_ - 1)]           # (B, MP, PS, ...)
+    b, mp, ps = g.shape[:3]
+    return g.reshape((b, mp * ps) + g.shape[3:])
+
+
+def _paged_scatter(pool: Array, table: Array, pos: Array, vals: Array,
+                   valid: Optional[Array] = None) -> Array:
+    """Scatter per-lane values into the pool at global cache positions.
+
+    pool: (NP, PS, ...); table: (B, MP); pos: (B, S) global positions;
+    vals: (B, S, ...).  Lanes routed to a sentinel table entry (or past the
+    table) are DROPPED — dead slots, whose rows are all sentinel, can never
+    write into pages a live slot owns.  ``valid`` False lanes write back
+    the value already there (a bit-identical no-op), mirroring
+    ``chunk_append_attend``'s padding contract."""
+    np_, ps = pool.shape[:2]
+    mp = table.shape[1]
+    page_idx = pos // ps
+    off = pos % ps
+    page = jnp.take_along_axis(table, jnp.clip(page_idx, 0, mp - 1), axis=1)
+    page = jnp.where(page_idx >= mp, np_, page)     # past-table -> drop lane
+    vals = vals.astype(pool.dtype)
+    if valid is not None:
+        old = pool[jnp.clip(page, 0, np_ - 1), off]
+        sel = valid.reshape(valid.shape + (1,) * (vals.ndim - 2))
+        vals = jnp.where(sel, vals, old)
+    return pool.at[page, off].set(vals, mode="drop")
+
+
+def paged_append_attend(q: Array, k: Array, v: Array, kv_cache: dict,
+                        table: Array, *, n_tokens: Optional[Array] = None):
+    """Decode / chunked-prefill attention against a PAGED cache.
+
+    kv_cache: {"k_pages": (NP, PS, KH, D), "v_pages": ..., "length": (B,)}
+    plus ``k_scale_pages``/``v_scale_pages`` for the quantized cache;
+    ``table``: (B, MP) slot→page map.  New K/V are scattered at each slot's
+    next positions, then the pool is gathered through the table into a
+    dense (B, MP*PS, ...) view feeding the SAME attention cores as the
+    unpaged cache.  When MP*PS equals the unpaged ``max_len`` the compute
+    graph is identical on identical values, so float-mode decode is
+    bit-identical to the unpaged path: garbage in unallocated pages scores
+    -1e30 after masking and contributes exact zeros to the softmax, the
+    same as unpaged out-of-range slots (tests/test_pages.py).
+
+    q: (B, S, H, D); S == 1 with ``n_tokens`` None is the decode tick, else
+    the chunked-prefill append (same padding semantics as
+    ``chunk_append_attend``).  Window/ring caches are never paged — the
+    engine gates paging to append-only full-attention models.
+    """
+    b, s = q.shape[:2]
+    length = kv_cache["length"]
+    decode = s == 1 and n_tokens is None
+    if decode:
+        pos = length[:, None]
+        valid = None
+        n_add = jnp.ones((b,), jnp.int32)
+    else:
+        n = n_tokens if n_tokens is not None else jnp.full((b,), s, jnp.int32)
+        offs = jnp.arange(s)[None, :]
+        valid = offs < n[:, None]
+        pos = length[:, None] + jnp.minimum(offs, n[:, None])
+        n_add = n
+    q_pos = length[:, None] + jnp.arange(s)[None, :]
+    quantized = "k_scale_pages" in kv_cache
+    if quantized:
+        kc, ks = _kv_encode(k)
+        vc, vs = _kv_encode(v)
+        kp = _paged_scatter(kv_cache["k_pages"], table, pos, kc, valid)
+        vp = _paged_scatter(kv_cache["v_pages"], table, pos, vc, valid)
+        ksp = _paged_scatter(kv_cache["k_scale_pages"], table, pos, ks, valid)
+        vsp = _paged_scatter(kv_cache["v_scale_pages"], table, pos, vs, valid)
+        new_cache = {"k_pages": kp, "v_pages": vp, "k_scale_pages": ksp,
+                     "v_scale_pages": vsp, "length": length + n_add}
+        if decode:
+            out = quantized_decode_attention(
+                q, _paged_view(kp, table), _paged_view(ksp, table),
+                _paged_view(vp, table), _paged_view(vsp, table),
+                lengths=length + 1)
+        else:
+            out = quantized_chunk_attention(
+                q, _paged_view(kp, table), _paged_view(ksp, table),
+                _paged_view(vp, table), _paged_view(vsp, table),
+                q_pos=q_pos)
+    else:
+        kp = _paged_scatter(kv_cache["k_pages"], table, pos, k, valid)
+        vp = _paged_scatter(kv_cache["v_pages"], table, pos, v, valid)
+        new_cache = {"k_pages": kp, "v_pages": vp, "length": length + n_add}
+        if decode:
+            out = decode_attention(q, _paged_view(kp, table),
+                                   _paged_view(vp, table), lengths=length + 1)
+        else:
+            out = chunk_cache_attention(q, _paged_view(kp, table),
+                                        _paged_view(vp, table), q_pos=q_pos)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
 # Attention block (projections through Numerics)
 # ---------------------------------------------------------------------------
 
@@ -574,6 +685,7 @@ def attention_block(
     cross_kv: Optional[tuple] = None,
     train_mode: bool = False,
     n_tokens: Optional[Array] = None,
+    page_table: Optional[Array] = None,
 ):
     """Self- (or cross-) attention with optional KV cache for decode.
 
@@ -586,6 +698,9 @@ def attention_block(
     prefill path: x holds a prompt chunk, ``n_tokens`` (B,) marks how many
     of its S tokens are real per slot (None == all S), and the whole chunk
     is appended + attended in one pass (``chunk_append_attend``).
+
+    A PAGED cache ({"k_pages": ..., ...}, see serving.pages) requires
+    ``page_table`` (B, MP) and routes through ``paged_append_attend``.
     """
     b, s, _ = x.shape
     h, kh, hd = mcfg.num_heads, mcfg.num_kv_heads, mcfg.resolved_head_dim
@@ -601,7 +716,11 @@ def attention_block(
         k, v = cross_kv
 
     new_cache = None
-    if kv_cache is not None and cross_kv is None:
+    if kv_cache is not None and cross_kv is None and "k_pages" in kv_cache:
+        assert page_table is not None, "paged kv_cache needs a page_table"
+        out, new_cache = paged_append_attend(q, k, v, kv_cache, page_table,
+                                             n_tokens=n_tokens)
+    elif kv_cache is not None and cross_kv is None:
         if s == 1 and n_tokens is None:
             # Decode: append this step's K/V, attend over the filled cache.
             out, new_cache = _append_attend_one(q, k, v, kv_cache, window)

@@ -152,12 +152,14 @@ def _apply_layer(
     enc_kv: Optional[tuple] = None,
     mesh=None,
     n_tokens: Optional[Array] = None,
+    page_table: Optional[Array] = None,
 ):
     """One layer (pre-norm residual).  Returns (x, new_state, aux_loss).
 
     ``n_tokens`` (B,) marks the chunked-prefill path: x holds a prompt
     chunk of which only the first n_tokens[b] positions are real per slot;
     state updates for the padding (and for slots with n == 0) are no-ops.
+    ``page_table`` (B, MP) routes paged KV caches (see serving.pages).
     """
     aux = jnp.float32(0.0)
     new_state: Any = None
@@ -167,7 +169,8 @@ def _apply_layer(
         attn_out, kv = attention_block(
             lp["attn"], h, mcfg, nx, positions=positions,
             window=window, kv_cache=(state or {}).get("kv"),
-            train_mode=mcfg.remat, n_tokens=n_tokens)
+            train_mode=mcfg.remat, n_tokens=n_tokens,
+            page_table=page_table)
         x = x + attn_out
         new_state = {"kv": kv} if kv is not None else None
         if enc_kv is not None:
@@ -378,16 +381,51 @@ def _cross_kv(params, enc_out, mcfg, nx):
 # ---------------------------------------------------------------------------
 
 
-def init_decode_state(mcfg: ModelConfig, batch: int, max_len: int) -> dict:
-    """Allocate per-layer decode state, stacked over scan groups."""
+def init_decode_state(mcfg: ModelConfig, batch: int, max_len: int, *,
+                      page_size: Optional[int] = None,
+                      pool_pages: Optional[int] = None) -> dict:
+    """Allocate per-layer decode state, stacked over scan groups.
+
+    With ``page_size``/``pool_pages`` set, full-attention KV caches become
+    PAGED: each layer holds a global ``(pool_pages, page_size, ...)`` pool
+    shared by all slots, and the state gains a ``page_table`` (batch,
+    max_pages) int32 leaf (initialized to the sentinel ``pool_pages``)
+    mapping each slot's logical pages to physical pool pages.  Window/ring
+    caches and recurrent state are never paged — the serving engine gates
+    paging to append-only full-attention models.
+    """
     pattern, n_groups, remainder = _pattern(mcfg)
     kh, hd = mcfg.num_kv_heads, mcfg.resolved_head_dim
     dtype = mcfg.activation_dtype
+    paged = page_size is not None
+    if paged:
+        assert pool_pages is not None and pool_pages >= 1
+        max_pages = -(-max_len // page_size)
 
     def one(kind):
         if kind == "attention":
             window = mcfg.window_size if mcfg.attention_type == "hybrid" else 0
             cache_len = window if window > 0 else max_len
+            if paged and window == 0:
+                if mcfg.kv_quant:
+                    return {"kv": {
+                        "k_pages": jnp.zeros(
+                            (pool_pages, page_size, kh, hd), jnp.int8),
+                        "v_pages": jnp.zeros(
+                            (pool_pages, page_size, kh, hd), jnp.int8),
+                        "k_scale_pages": jnp.zeros(
+                            (pool_pages, page_size, kh), jnp.bfloat16),
+                        "v_scale_pages": jnp.zeros(
+                            (pool_pages, page_size, kh), jnp.bfloat16),
+                        "length": jnp.zeros((batch,), jnp.int32),
+                    }}
+                return {"kv": {
+                    "k_pages": jnp.zeros(
+                        (pool_pages, page_size, kh, hd), dtype),
+                    "v_pages": jnp.zeros(
+                        (pool_pages, page_size, kh, hd), dtype),
+                    "length": jnp.zeros((batch,), jnp.int32),
+                }}
             if mcfg.kv_quant:
                 # ABFP-quantized cache: int8 codes + per-(token, head) scale.
                 return {"kv": {
@@ -433,6 +471,12 @@ def init_decode_state(mcfg: ModelConfig, batch: int, max_len: int) -> dict:
         "extra": tuple(one(pattern[r]) for r in range(remainder)),
         "position": jnp.zeros((batch,), jnp.int32),
     }
+    if paged:
+        # Sentinel-initialized: every entry routes writes to the drop lane
+        # until the engine allocates a page (serving.pages owns the host
+        # mirror and refreshes this leaf before each jitted pass).
+        state["page_table"] = jnp.full((batch, max_pages), pool_pages,
+                                       jnp.int32)
     return state
 
 
@@ -450,6 +494,7 @@ def decode_step(
     nx = nx or Numerics(QuantConfig(mode="float"))
     b = token.shape[0]
     positions = state["position"][:, None]                   # (B, 1)
+    pt = state.get("page_table")
     tok = token[:, None] if token.ndim == 1 else token[:, None, :]
     x = _embed(params, tok, mcfg, positions)
 
@@ -464,7 +509,8 @@ def decode_step(
             ek = g_enc_kv[j] if g_enc_kv is not None else None
             x, st, _ = _apply_layer(
                 gparams[j], x, mcfg, kind, nxj,
-                positions=positions, state=gstate[j], enc_kv=ek)
+                positions=positions, state=gstate[j], enc_kv=ek,
+                page_table=pt)
             new_states.append(st)
         return x, tuple(new_states)
 
@@ -477,7 +523,8 @@ def decode_step(
         kind = pattern[r]
         x, st, _ = _apply_layer(
             params["extra"][r], x, mcfg, kind, nx.fold(n_groups * glen + r),
-            positions=positions, state=state["extra"][r], enc_kv=None)
+            positions=positions, state=state["extra"][r], enc_kv=None,
+            page_table=pt)
         new_extra.append(st)
 
     x = norm(x, params["final_norm"], mcfg.norm_type)
@@ -487,6 +534,8 @@ def decode_step(
         "extra": tuple(new_extra),
         "position": state["position"] + 1,
     }
+    if pt is not None:
+        new_state["page_table"] = pt
     return logits, new_state
 
 
@@ -528,6 +577,7 @@ def prefill(
     nx = nx or Numerics(QuantConfig(mode="float"))
     b, s = tokens.shape[:2]
     positions = state["position"][:, None] + jnp.arange(s)[None, :]
+    pt = state.get("page_table")
     x = _embed(params, tokens, mcfg, positions)
 
     pattern, n_groups, remainder = _pattern(mcfg)
@@ -542,7 +592,7 @@ def prefill(
             x, st, _ = _apply_layer(
                 gparams[j], x, mcfg, kind, nxj,
                 positions=positions, state=gstate[j], enc_kv=ek,
-                n_tokens=n_tokens)
+                n_tokens=n_tokens, page_table=pt)
             new_states.append(st)
         return x, tuple(new_states)
 
@@ -556,7 +606,7 @@ def prefill(
         x, st, _ = _apply_layer(
             params["extra"][r], x, mcfg, kind, nx.fold(n_groups * glen + r),
             positions=positions, state=state["extra"][r], enc_kv=None,
-            n_tokens=n_tokens)
+            n_tokens=n_tokens, page_table=pt)
         new_extra.append(st)
 
     x = norm(x, params["final_norm"], mcfg.norm_type)
@@ -568,6 +618,8 @@ def prefill(
         "extra": tuple(new_extra),
         "position": state["position"] + n_tokens,
     }
+    if pt is not None:
+        new_state["page_table"] = pt
     return logits, new_state
 
 

@@ -1,7 +1,16 @@
 """repro.serving — arrival-driven continuous-batching engine (ABFP or
 float numerics): engine core + pluggable schedulers + SLO metrics +
-fault injection/detection/recovery."""
+fault injection/detection/recovery + paged KV pool with preemption and
+admission backpressure."""
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.pages import (  # noqa: F401
+    PagePool,
+    PoolStats,
+    page_table_array,
+    pages_needed,
+    plan_chunk,
+    prefix_key,
+)
 from repro.serving.faults import (  # noqa: F401
     FAULT_KINDS,
     Detection,

@@ -82,13 +82,41 @@ an ABFP K-tile and never reorders an f32 contraction, so greedy decode
 is BIT-IDENTICAL to the single-device engine at any mesh shape, noise
 included — the open-loop submit/poll/drain API is unchanged
 (tests/test_sharded_serving.py).
+
+Paged KV + overload robustness
+------------------------------
+``paged=True`` swaps the per-slot ``max_len`` KV strips for a shared
+``serving.pages.PagePool``: pages are fixed-size (aligned to the ABFP
+tile width so quantized KV scales never straddle a page) and each slot
+addresses them through a static-shape page table gathered INSIDE the
+jitted pass — allocation churn never recompiles, and float-mode decode
+is bit-identical to the unpaged engine.  The host-side table
+(``self._table``) is the source of truth and is refreshed into device
+state before every pass; unallocated entries hold a sentinel
+(``pool.num_pages``) whose writes drop and whose reads clamp, so a dead
+slot can never corrupt a live page.  Prefix pages of identical prompts
+are shared copy-on-write across requests (chained-hash keys over full
+pages; a write to a shared page splits it first).
+
+Under page saturation the engine PREEMPTS the lowest-priority / youngest
+slot: its pages return to the pool and the request requeues carrying a
+replay of ``prompt + generated``; on re-admission it re-prefills the
+replay and continues bit-identically (greedy decode is deterministic, so
+recompute IS restore).  Conservation extends to ``preempted == resumed +
+timed_out`` per request.  Backpressure sheds newly ARRIVED requests past
+``queue_watermark`` (marked ``shed`` with a ``retry_after`` hint,
+surfaced through ``poll()``); ``tenant_quota`` caps one tenant's pages at
+projected footprint; pool pressure above ``page_watermarks[0]`` flips
+hysteretic DEGRADED mode (admissions get ``degraded_max_new``, prefill
+drops to the smallest bucket) until pressure falls below
+``page_watermarks[1]``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Sequence, Union
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -102,6 +130,13 @@ from repro.models.layers import Numerics
 from repro.serving import faults as faultlib
 from repro.serving.faults import FaultConfig, FaultPlan
 from repro.serving.metrics import ServingMetrics
+from repro.serving.pages import (
+    PagePool,
+    page_table_array,
+    pages_needed,
+    plan_chunk,
+    prefix_key,
+)
 from repro.serving.scheduler import Scheduler, get_scheduler
 
 
@@ -122,6 +157,12 @@ class Request:
     prompt_pos: int = 0                 # prompt tokens consumed so far
     done: bool = False
     timed_out: bool = False             # cancelled by deadline expiry
+    replay: Optional[List[int]] = None  # recompute stream after preemption:
+                                        # prompt + tokens already streamed,
+                                        # re-prefilled verbatim on resume
+    preempted: int = 0                  # times evicted under page pressure
+    shed: bool = False                  # rejected by admission backpressure
+    retry_after: Optional[float] = None  # backoff hint stamped when shed
 
 
 class ServingEngine:
@@ -137,7 +178,16 @@ class ServingEngine:
                  mesh=None,
                  faults: Optional[Union[FaultConfig, FaultPlan]] = None,
                  recovery: bool = True,
-                 detect_every: int = 4):
+                 detect_every: int = 4,
+                 paged: bool = False,
+                 page_size: Optional[int] = None,
+                 pool_pages: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 preemption: Optional[bool] = None,
+                 queue_watermark: Optional[int] = None,
+                 page_watermarks: Tuple[float, float] = (0.85, 0.5),
+                 degraded_max_new: Optional[int] = None,
+                 tenant_quota: Optional[int] = None):
         self.mesh = mesh
         if quant.mode == "abfp_packed":
             # Quantize-once: pack every dense weight at admission time so
@@ -157,7 +207,50 @@ class ServingEngine:
         self.quant = quant
         self.seed = seed
         self.key = jax.random.PRNGKey(seed)
-        self.state = init_decode_state(mcfg, capacity, max_len)
+        self.prefill_chunks = tuple(sorted({int(c) for c in prefill_chunks}))
+        self.chunked = chunked and bool(self.prefill_chunks)
+
+        # -- paged KV pool (serving.pages) ---------------------------------
+        # With ``paged=False`` the engine allocates the legacy per-slot
+        # max_len caches and NOTHING below exists on the hot path.
+        self.paged = bool(paged)
+        self.pool: Optional[PagePool] = None
+        self.page_size = 0
+        self.max_pages = 0
+        if self.paged:
+            if mcfg.attention_type != "full":
+                raise ValueError(
+                    "paged serving needs append-only full-attention KV "
+                    f"caches; got attention_type={mcfg.attention_type!r}")
+            # ABFP tile width is the natural page quantum: the paper's
+            # fixed-size analog tiles align with the int8 cache blocks.
+            self.page_size = int(page_size) if page_size else (
+                quant.tile_width if quant.mode != "float"
+                else min(16, max_len))
+            self.max_pages = pages_needed(max_len, self.page_size)
+            self.pool = PagePool(
+                int(pool_pages) if pool_pages else capacity * self.max_pages,
+                self.page_size)
+            self._table = page_table_array(capacity, self.max_pages,
+                                           self.pool.sentinel)
+            self._slot_pages: List[List[int]] = [[] for _ in range(capacity)]
+            self._slot_len = [0] * capacity     # tokens appended per slot
+            self._slot_keys: List[List[int]] = [[] for _ in range(capacity)]
+            self._slot_cap: List[Optional[int]] = [None] * capacity
+        self.prefix_enabled = self.paged and bool(prefix_cache) and self.chunked
+        self.preemption = self.paged if preemption is None else bool(preemption)
+        self.queue_watermark = queue_watermark
+        hi, lo = page_watermarks
+        assert 0.0 < lo <= hi <= 1.0, "page_watermarks must be (hi, lo) in (0,1]"
+        self.page_watermarks = (float(hi), float(lo))
+        self.degraded_max_new = degraded_max_new
+        self.tenant_quota = tenant_quota
+        self._degraded = False
+
+        self.state = init_decode_state(
+            mcfg, capacity, max_len,
+            page_size=self.page_size if self.paged else None,
+            pool_pages=self.pool.num_pages if self.paged else None)
         if mesh is not None:
             # Slot state / KV caches shard over the data axes (slot = batch
             # row); everything stays replicated over 'model' so the
@@ -168,14 +261,14 @@ class ServingEngine:
         self.slots: List[Optional[Request]] = [None] * capacity
         self._next_input = np.zeros((capacity,), np.int32)
         self.ticks = 0
-        self.prefill_chunks = tuple(sorted({int(c) for c in prefill_chunks}))
-        self.chunked = chunked and bool(self.prefill_chunks)
         self.scheduler = get_scheduler(policy)
         self.metrics = ServingMetrics(capacity)
         self.tick_time = float(tick_time)
         self._clock = clock             # None => simulated (tick_time/pass)
         self.now = clock() if clock is not None else 0.0
         self._just_finished: List[Request] = []
+        self._returned: List[Request] = []  # finalized outside step():
+                                            # shed + admission-pass expiries
         self._has_deadlines = False     # set on first deadline'd request
 
         # Wall-clock tick monitoring: every jitted pass's host-visible
@@ -226,10 +319,17 @@ class ServingEngine:
         # One compile per chunk bucket (shape-specialized), nothing more.
         self._jit_prefill = jax.jit(_prefill, donate_argnums=(1,))
 
+        def _names(path):
+            return [str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path]
+
         def _reset(state, i):
             def reset(path, leaf):
-                names = [str(getattr(k, "key", getattr(k, "idx", k)))
-                         for k in path]
+                names = _names(path)
+                if names[-1].endswith("_pages") or names[-1] == "page_table":
+                    # Pool pages are GLOBAL (other slots own them); the
+                    # page table is host-owned and refreshed every pass.
+                    return leaf
                 b_axis = 1 if "groups" in names else 0
                 if leaf.ndim <= b_axis:
                     return leaf
@@ -245,6 +345,37 @@ class ServingEngine:
         # state rebuild that scales with model size.
         self._jit_reset = jax.jit(_reset, donate_argnums=(0,))
 
+        def _attach(state, i, length):
+            # Prefix-cache attach: slot i starts mid-sequence — its cache
+            # length and rope position jump to the shared-prefix length.
+            def setl(path, leaf):
+                names = _names(path)
+                if names[-1] not in ("position", "length"):
+                    return leaf
+                b_axis = 1 if "groups" in names else 0
+                idx = (slice(None),) * b_axis + (i,)
+                return leaf.at[idx].set(jnp.asarray(length, leaf.dtype))
+
+            return jax.tree_util.tree_map_with_path(setl, state)
+
+        self._jit_attach = jax.jit(_attach, donate_argnums=(0,))
+
+        def _copy_page(state, src, dst):
+            # Copy-on-write: duplicate one physical page across every
+            # layer's pool (src/dst are data, so one compile serves all
+            # CoW splits).
+            def cp(path, leaf):
+                names = _names(path)
+                if not names[-1].endswith("_pages"):
+                    return leaf
+                if "groups" in names:
+                    return leaf.at[:, dst].set(leaf[:, src])
+                return leaf.at[dst].set(leaf[src])
+
+            return jax.tree_util.tree_map_with_path(cp, state)
+
+        self._jit_copy_page = jax.jit(_copy_page, donate_argnums=(0,))
+
     # -- clock ----------------------------------------------------------------
     def _tick_clock(self):
         """One jitted pass just ran: advance the engine clock (simulated
@@ -258,27 +389,77 @@ class ServingEngine:
         self.state = self._jit_reset(self.state, jnp.int32(i))
 
     # -- admission ------------------------------------------------------------
+    def _feed(self, req: Request) -> List[int]:
+        """The token stream this request prefills from: the preemption
+        replay snapshot (prompt + tokens already streamed) when resuming a
+        recompute, else the prompt."""
+        return req.replay if req.replay is not None else req.prompt
+
     def fits(self, req: Request) -> bool:
         """A request needs a non-empty prompt (there is no token to condition
         the first generation on otherwise) and must leave room for at least
         one generated token — the chunk scatter parks padding lanes on the
         next unwritten cache slot, which only exists while
-        length + n_tokens < max_len."""
-        return (len(req.prompt) >= 1
-                and len(req.prompt) + max(1, req.max_new_tokens)
-                <= self.max_len)
+        length + n_tokens < max_len.
+
+        Under paging the legacy ``prompt + max_new <= max_len`` hard bound
+        relaxes to a PAGE-BUDGET check: a long request is admissible iff
+        the page table can address it and the pool (at full eviction) could
+        grow it — the pool serves worst cases that per-slot allocation
+        would have to reserve for everyone."""
+        if len(req.prompt) < 1:
+            return False
+        total = len(req.prompt) + max(1, req.max_new_tokens)
+        if not self.paged:
+            return total <= self.max_len
+        need = pages_needed(total, self.page_size)
+        return need <= self.max_pages and need <= self.pool.num_pages
+
+    def _should_shed(self, req: Request, at: float) -> bool:
+        """Admission backpressure for requests arriving NOW: shed when the
+        queue is past its watermark, or when the pool is past the high
+        pressure watermark AND the queue already covers the batch."""
+        if (self.queue_watermark is not None
+                and self.scheduler.pending(at) >= self.queue_watermark):
+            return True
+        if (self.paged and self.pool.pressure() >= self.page_watermarks[0]
+                and self.scheduler.pending(at) >= self.capacity):
+            return True
+        return False
+
+    def _retry_after(self, at: float) -> float:
+        """Absolute engine-clock time the shed client should retry at:
+        backlog / capacity service rounds at the observed mean E2E (or a
+        few ticks before any request has finished)."""
+        fin = [r.e2e for r in self.metrics.finished() if r.e2e is not None]
+        est = float(np.mean(fin)) if fin else self.tick_time * 8
+        backlog = self.scheduler.pending(at) + sum(
+            1 for s in self.slots if s is not None)
+        return at + est * max(1.0, backlog / max(1, self.capacity))
 
     def submit(self, req: Request) -> bool:
         """Enqueue a request for arrival-driven admission.  Stamps
         ``arrival_time`` with the current clock when unset.  Oversized
         requests are rejected (marked done, recorded in metrics) instead of
-        crashing the serve loop; returns False for those."""
+        crashing the serve loop; under backpressure watermarks an arriving
+        request is SHED instead of queued (``req.shed`` with a
+        ``req.retry_after`` hint, surfaced through the next ``poll()``).
+        Returns False for both."""
         if not self.fits(req):
             req.done = True
             self.metrics.on_reject(req.uid)
             return False
         if req.arrival_time is None:
             req.arrival_time = self.now
+        if req.arrival_time <= self.now and self._should_shed(
+                req, req.arrival_time):
+            req.done = True
+            req.shed = True
+            req.retry_after = self._retry_after(req.arrival_time)
+            self.metrics.on_shed(req.uid, tenant=req.tenant,
+                                 retry_after=req.retry_after)
+            self._returned.append(req)
+            return False
         if req.deadline is not None:
             self._has_deadlines = True
         self.metrics.on_submit(req.uid, arrival_time=req.arrival_time,
@@ -304,28 +485,109 @@ class ServingEngine:
                 self.metrics.on_admit(req.uid, self.now, tenant=req.tenant,
                                       prompt_len=len(req.prompt),
                                       arrival_time=req.arrival_time)
+                if self.paged:
+                    self._table[i, :] = self.pool.sentinel
+                    self._slot_pages[i] = []
+                    self._slot_len[i] = 0
+                    self._slot_keys[i] = []
+                    # Degraded mode caps generation for admissions made
+                    # under pressure (never below what a resumed request
+                    # already streamed).
+                    self._slot_cap[i] = None
+                    if self._degraded and self.degraded_max_new is not None:
+                        self._slot_cap[i] = max(self.degraded_max_new,
+                                                len(req.generated) + 1)
+                toks = self._feed(req)
                 if self.chunked:
                     req.prompt_pos = 0      # consumed by prefill passes
+                    if self.prefix_enabled:
+                        self._attach_prefix(i, req)
                 else:
                     # Legacy prefill-in-decode: one prompt token per tick.
-                    self._next_input[i] = req.prompt[0]
+                    self._next_input[i] = toks[0]
                     req.prompt_pos = 1
                 return True
         return False
 
+    def _admissible(self, req: Request) -> bool:
+        """Pop-time admission filter: per-tenant page quota (noisy-neighbor
+        isolation) and basic pool availability.  Requests failing it are
+        SKIPPED, not dequeued, so one greedy tenant never head-of-line
+        blocks the rest of the queue."""
+        if not self.paged:
+            return True
+        return self._quota_ok(req) and self.pool.available() >= 1
+
+    def _quota_ok(self, req: Request) -> bool:
+        """Per-tenant page quota, checked against PROJECTED footprints.
+        Pages are allocated lazily per prefill chunk, so gating on current
+        holdings alone would let a tenant admit several requests "under
+        quota" in one pass and then grow all of them past it; instead each
+        live same-tenant slot is charged its full eventual footprint.  A
+        tenant with nothing in flight always passes — a quota can throttle
+        a tenant, never starve it outright.  Also the quota-only filter
+        for the priority-claim path, where page availability is what
+        preemption is about to create."""
+        if self.tenant_quota is None or self.pool is None:
+            return True
+        live = [r for r in self.slots
+                if r is not None and r.tenant == req.tenant]
+        if not live and self.pool.tenant_held(req.tenant) == 0:
+            return True
+        charged = sum(
+            pages_needed(len(r.prompt) + max(1, r.max_new_tokens),
+                         self.page_size) for r in live)
+        remaining = max(1, req.max_new_tokens - len(req.generated))
+        need = pages_needed(len(self._feed(req)) + remaining,
+                            self.page_size)
+        return charged + need <= self.tenant_quota
+
     def _admit_arrived(self) -> List[Request]:
         """Fill free slots from the scheduler queue (policy order) with
-        requests that have arrived by the current clock."""
+        requests that have arrived by the current clock.
+
+        Queue expiry runs FIRST: a request requeued (by fault recovery or
+        preemption) whose deadline has since passed must be timed out here,
+        never re-admitted — its expiry is surfaced through the same poll
+        that would have admitted it."""
+        if self._has_deadlines:
+            self._returned.extend(self._expire_queue())
         admitted: List[Request] = []
         free = self.slots.count(None)
         while free > 0:
-            req = self.scheduler.pop(self.now)
+            req = self.scheduler.pop(
+                self.now, self._admissible if self.paged else None)
             if req is None:
                 break
             self.try_admit(req)     # a slot is free; fits() held at submit
             admitted.append(req)
             free -= 1
+        if self.paged and self.preemption:
+            self._priority_claim(admitted)
         return admitted
+
+    def _priority_claim(self, admitted: List[Request]):
+        """Under saturation, a strictly-higher-priority arrival claims a
+        slot (and its pages) by preempting the lowest-priority live
+        request; ties and lower priorities wait their turn."""
+        while True:
+            top = self.scheduler.peek(self.now, self._quota_ok)
+            if top is None:
+                return
+            if self.slots.count(None) and self.pool.available() >= 1:
+                return              # normal admission will take it
+            victims = [i for i, s in enumerate(self.slots)
+                       if s is not None and s.priority < top.priority]
+            if not victims:
+                return
+            v = min(victims, key=lambda i: (self.slots[i].priority,
+                                            -(self.slots[i].arrival_time
+                                              or 0.0),
+                                            -self.slots[i].uid))
+            self._preempt_slot(v)
+            self.scheduler.remove(top)
+            self.try_admit(top)
+            admitted.append(top)
 
     # -- sampling -------------------------------------------------------------
     def _record(self, i: int, req: Request, logits_row: np.ndarray):
@@ -353,11 +615,185 @@ class ServingEngine:
             self.metrics.on_corrupted(req.uid)
         if req.on_token is not None:
             req.on_token(req, nxt)
-        if len(req.generated) >= req.max_new_tokens:
+        limit = req.max_new_tokens
+        if self.paged and self._slot_cap[i] is not None:
+            limit = min(limit, self._slot_cap[i])
+        if len(req.generated) >= limit:
             req.done = True
             self.slots[i] = None            # free for the next request
+            self._release_slot(i, req.tenant)
             self.metrics.on_finish(req.uid, self.now)
             self._just_finished.append(req)
+
+    # -- paged pool management --------------------------------------------
+    def _release_slot(self, i: int, tenant: str):
+        """Return slot i's pages to the pool and clear its host mirrors.
+        Pages the prefix cache also holds stay allocated for reuse."""
+        if not self.paged:
+            return
+        if self._slot_pages[i]:
+            self.pool.release(self._slot_pages[i], tenant)
+        self._slot_pages[i] = []
+        self._slot_len[i] = 0
+        self._slot_keys[i] = []
+        self._slot_cap[i] = None
+        self._table[i, :] = self.pool.sentinel
+
+    def _preempt_slot(self, i: int):
+        """Evict slot i to the queue with a recompute plan: its pages go
+        back to the pool NOW, and ``req.replay`` snapshots prompt + every
+        token already streamed so the resume prefills the identical stream
+        (bit-identical continuation in float mode — re-prefilling the same
+        tokens rebuilds the same cache the decode ticks had built)."""
+        req = self.slots[i]
+        self.slots[i] = None
+        self._next_input[i] = 0
+        self._release_slot(i, req.tenant)
+        req.replay = list(req.prompt) + list(req.generated)
+        req.prompt_pos = 0
+        req.preempted += 1
+        self.metrics.on_preempt(req.uid, self.now)
+        self.scheduler.requeue(req)
+
+    def _preempt_for(self, req: Request) -> bool:
+        """Free pages for ``req`` by preempting a live victim that does not
+        outrank it (strictly lower priority, or same priority but younger).
+        Returns False when no such victim exists."""
+        cand = [i for i, s in enumerate(self.slots)
+                if s is not None and s is not req
+                and (s.priority < req.priority
+                     or (s.priority == req.priority
+                         and (s.arrival_time or 0.0)
+                         >= (req.arrival_time or 0.0)))]
+        if not cand:
+            return False
+        v = min(cand, key=lambda i: (self.slots[i].priority,
+                                     -(self.slots[i].arrival_time or 0.0),
+                                     -self.slots[i].uid))
+        self._preempt_slot(v)
+        return True
+
+    def _chunk_cap(self) -> int:
+        """Largest prefill chunk this tick: degraded mode shrinks the
+        bucket to the smallest configured chunk so admission burst memory
+        stays bounded while the pool is saturated."""
+        if self.paged and self._degraded:
+            return self.prefill_chunks[0]
+        return self.prefill_chunks[-1] if self.prefill_chunks else 1
+
+    def _update_degraded(self):
+        """Hysteretic degraded mode: enter at the high pool-pressure
+        watermark, recover only once pressure falls to the low one."""
+        hi, lo = self.page_watermarks
+        p = self.pool.pressure()
+        if not self._degraded and p >= hi:
+            self._degraded = True
+            self.metrics.on_degraded(True, self.now)
+        elif self._degraded and p <= lo:
+            self._degraded = False
+            self.metrics.on_degraded(False, self.now)
+
+    def _grow_slot(self, i: int, req: Request, need: int) -> bool:
+        """Make slot i's next ``need`` token positions writable: CoW-split
+        shared pages in the write range, allocate missing pages, and — when
+        the pool is dry — preempt non-outranking victims (possibly slot i
+        itself, returning False)."""
+        extra, writes = plan_chunk(self._slot_len[i], need,
+                                   self._slot_pages[i], self.page_size)
+        for j in writes:
+            p = self._slot_pages[i][j]
+            newp = self.pool.cow(p, req.tenant)
+            while newp is None:
+                if not self._preempt_for(req):
+                    self._preempt_slot(i)
+                    return False
+                newp = self.pool.cow(p, req.tenant)
+            if newp != p:
+                self.state = self._jit_copy_page(
+                    self.state, jnp.int32(p), jnp.int32(newp))
+                self._slot_pages[i][j] = newp
+                self._table[i, j] = newp
+                self.metrics.on_cow()
+        while extra > 0:
+            got = self.pool.alloc(extra, req.tenant)
+            if got is not None:
+                base = len(self._slot_pages[i])
+                for jj, p in enumerate(got):
+                    self._table[i, base + jj] = p
+                self._slot_pages[i].extend(got)
+                break
+            if not self._preempt_for(req):
+                self._preempt_slot(i)
+                return False
+        return True
+
+    def _ensure_pages(self, live: List[int]) -> List[int]:
+        """Before a jitted pass, guarantee every live slot owns writable
+        pages for the tokens it is about to append — higher-priority /
+        older slots claim first, so pool exhaustion preempts the requests
+        preemption policy says should yield.  Returns the surviving live
+        list."""
+        cap = self._chunk_cap()
+        order = sorted(live, key=lambda i: (-self.slots[i].priority,
+                                            self.slots[i].arrival_time or 0.0,
+                                            self.slots[i].uid))
+        for i in order:
+            req = self.slots[i]
+            if req is None:
+                continue            # preempted by an earlier claimant
+            toks = self._feed(req)
+            rem = len(toks) - req.prompt_pos
+            need = min(rem, cap) if rem > 0 else 1
+            self._grow_slot(i, req, need)
+        return [i for i in live if self.slots[i] is not None]
+
+    def _attach_prefix(self, i: int, req: Request):
+        """Prefix-cache attach at admission: walk the prompt's full-page
+        chain keys through the pool cache; every hit is SHARED (ref++) so
+        those pages are never re-prefilled.  When the whole prompt hits, we
+        back off one token — the last token re-feeds through the normal
+        pass to produce first logits, and its write triggers the CoW split
+        of the shared final page."""
+        toks = self._feed(req)
+        key = None
+        matched: List[Tuple[int, int]] = []
+        pos = 0
+        while pos + self.page_size <= len(toks):
+            key = prefix_key(key, toks[pos:pos + self.page_size])
+            p = self.pool.lookup(key)
+            if p is None:
+                break
+            matched.append((key, p))
+            pos += self.page_size
+        if not matched:
+            return
+        self.pool.share([p for _, p in matched], req.tenant)
+        self._slot_pages[i] = [p for _, p in matched]
+        self._slot_keys[i] = [k for k, _ in matched]
+        for j, (_, p) in enumerate(matched):
+            self._table[i, j] = p
+        attached = min(pos, len(toks) - 1)
+        self._slot_len[i] = attached
+        req.prompt_pos = attached
+        self.state = self._jit_attach(self.state, jnp.int32(i),
+                                      jnp.int32(attached))
+        self.metrics.on_prefix(len(matched))
+
+    def _register_prefix(self, i: int, req: Request):
+        """Publish slot i's fully-prefilled PROMPT pages under their chain
+        keys (fresh requests only — replay streams would poison the cache
+        with generated tokens)."""
+        if req.replay is not None:
+            return
+        full = min(req.prompt_pos, len(req.prompt)) // self.page_size
+        while len(self._slot_keys[i]) < full:
+            j = len(self._slot_keys[i])
+            block = req.prompt[j * self.page_size:(j + 1) * self.page_size]
+            prev = self._slot_keys[i][-1] if self._slot_keys[i] else None
+            key = prefix_key(prev, block)
+            self._slot_keys[i].append(key)
+            if j < len(self._slot_pages[i]):
+                self.pool.register(key, self._slot_pages[i][j])
 
     # -- deadlines --------------------------------------------------------
     def _expire_slots(self):
@@ -368,6 +804,7 @@ class ServingEngine:
             if (req is not None and req.deadline is not None
                     and req.deadline <= self.now):
                 self.slots[i] = None
+                self._release_slot(i, req.tenant)
                 req.done = True
                 req.timed_out = True
                 self.metrics.on_timeout(req.uid, self.now)
@@ -454,8 +891,10 @@ class ServingEngine:
                 continue
             self.slots[i] = None
             self._next_input[i] = 0
+            self._release_slot(i, req.tenant)
             req.prompt_pos = 0
             req.generated.clear()
+            req.replay = None       # corrupted stream: restart from prompt
             self.metrics.on_requeue(req.uid)
             self.scheduler.requeue(req)
 
@@ -490,20 +929,35 @@ class ServingEngine:
                 self._params_clean, self.mesh, self.quant)
             self._params_clean = self.params
             self._build_jitted()        # closures bind the new mesh
-            self.state = init_decode_state(self.mcfg, self.capacity,
-                                           self.max_len)
+            self.state = init_decode_state(
+                self.mcfg, self.capacity, self.max_len,
+                page_size=self.page_size if self.paged else None,
+                pool_pages=self.pool.num_pages if self.paged else None)
             self.state = shard_decode_state(self.state, self.mesh)
         else:
             # Single-array engine: re-program the array from the spare.
             self.params = self._params_clean
-            self.state = init_decode_state(self.mcfg, self.capacity,
-                                           self.max_len)
+            self.state = init_decode_state(
+                self.mcfg, self.capacity, self.max_len,
+                page_size=self.page_size if self.paged else None,
+                pool_pages=self.pool.num_pages if self.paged else None)
+        if self.paged:
+            # The lost shard's pool pages died with the state: rebuild the
+            # allocator (prefix cache included) from scratch.
+            self.pool = PagePool(self.pool.num_pages, self.page_size)
+            self._table = page_table_array(self.capacity, self.max_pages,
+                                           self.pool.sentinel)
+            self._slot_pages = [[] for _ in range(self.capacity)]
+            self._slot_len = [0] * self.capacity
+            self._slot_keys = [[] for _ in range(self.capacity)]
+            self._slot_cap = [None] * self.capacity
         inflight = [r for r in self.slots if r is not None]
         self.slots = [None] * self.capacity
         self._next_input[:] = 0
         for req in inflight:
             req.prompt_pos = 0
             req.generated.clear()
+            req.replay = None
             self.metrics.on_requeue(req.uid)
             self.scheduler.requeue(req)
         self.metrics.on_repair("reshards", 1)
@@ -527,22 +981,31 @@ class ServingEngine:
                 self._detect_and_recover()
             self._inject_due_faults()
         live = [i for i, s in enumerate(self.slots) if s is not None]
+        if self.paged:
+            self._update_degraded()
+            if live:
+                # Claim/CoW/grow pages for every token this pass appends;
+                # pool exhaustion preempts here, before the jitted call.
+                live = self._ensure_pages(live)
         if not live:
             return
         self.metrics.on_tick(self.now, len(live), self.capacity,
-                             self.scheduler.pending(self.now))
+                             self.scheduler.pending(self.now),
+                             pool=self.pool.stats() if self.paged else None,
+                             degraded=self._degraded)
         prefilling = [i for i in live
-                      if self.slots[i].prompt_pos < len(self.slots[i].prompt)]
+                      if self.slots[i].prompt_pos
+                      < len(self._feed(self.slots[i]))]
         if self.chunked and prefilling:
-            if all(len(self.slots[i].prompt) - self.slots[i].prompt_pos == 1
-                   for i in prefilling):
+            if all(len(self._feed(self.slots[i])) - self.slots[i].prompt_pos
+                   == 1 for i in prefilling):
                 # Every prefilling slot has exactly ONE prompt token left:
                 # the decode tick already has the right shape, so feed that
                 # token as the decode input instead of paying a padded
                 # smallest-bucket chunk pass.
                 for i in prefilling:
                     req = self.slots[i]
-                    self._next_input[i] = req.prompt[req.prompt_pos]
+                    self._next_input[i] = self._feed(req)[req.prompt_pos]
                     req.prompt_pos += 1
                 self._decode_tick()
             else:
@@ -553,21 +1016,25 @@ class ServingEngine:
     def _prefill_pass(self, live: List[int]):
         """One bucketed prefill pass: prompt chunks for prefilling slots,
         a single next token for decoding slots, no-op for empty slots."""
+        cap = self._chunk_cap()
         need = np.zeros((self.capacity,), np.int32)
         for i in live:
             req = self.slots[i]
-            rem = len(req.prompt) - req.prompt_pos
-            need[i] = min(rem, self.prefill_chunks[-1]) if rem > 0 else 1
+            rem = len(self._feed(req)) - req.prompt_pos
+            need[i] = min(rem, cap) if rem > 0 else 1
         bucket = next(c for c in self.prefill_chunks if c >= need.max())
 
         tokens = np.zeros((self.capacity, bucket), np.int32)
         for i in live:
             req = self.slots[i]
-            if req.prompt_pos < len(req.prompt):
+            toks = self._feed(req)
+            if req.prompt_pos < len(toks):
                 n = int(need[i])
-                tokens[i, :n] = req.prompt[req.prompt_pos:req.prompt_pos + n]
+                tokens[i, :n] = toks[req.prompt_pos:req.prompt_pos + n]
             else:
                 tokens[i, 0] = self._next_input[i]
+        if self.paged:
+            self.state["page_table"] = jnp.asarray(self._table)
         self.key, sub = jax.random.split(self.key)
         t0 = time.perf_counter()
         logits, self.state = self._jit_prefill(
@@ -577,17 +1044,26 @@ class ServingEngine:
         self.straggler.observe(time.perf_counter() - t0)
         self._tick_clock()
 
+        if self.paged:
+            for i in live:
+                self._slot_len[i] += int(need[i])
         for i in live:
             req = self.slots[i]
-            if req.prompt_pos < len(req.prompt):
+            toks = self._feed(req)
+            if req.prompt_pos < len(toks):
                 req.prompt_pos += int(need[i])
-                if req.prompt_pos < len(req.prompt):
+                if self.prefix_enabled:
+                    self._register_prefix(i, req)
+                if req.prompt_pos < len(toks):
                     continue                # still prefilling; logits unused
             # Prompt just completed (logits are at its last prompt token) or
             # the slot was decoding: sample the next token either way.
             self._record(i, req, logits[i])
 
     def _decode_tick(self):
+        if self.paged:
+            self.state["page_table"] = jnp.asarray(self._table)
+        fed = [i for i, s in enumerate(self.slots) if s is not None]
         token = jnp.asarray(self._next_input)
         self.key, sub = jax.random.split(self.key)
         t0 = time.perf_counter()
@@ -596,12 +1072,16 @@ class ServingEngine:
         self.straggler.observe(time.perf_counter() - t0)
         self._tick_clock()
 
+        if self.paged:
+            for i in fed:
+                self._slot_len[i] += 1
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            if req.prompt_pos < len(req.prompt):
+            toks = self._feed(req)
+            if req.prompt_pos < len(toks):
                 # legacy prefill-in-decode: feed the next prompt token
-                self._next_input[i] = req.prompt[req.prompt_pos]
+                self._next_input[i] = toks[req.prompt_pos]
                 req.prompt_pos += 1
                 continue
             self._record(i, req, logits[i])
@@ -610,34 +1090,40 @@ class ServingEngine:
     def poll(self) -> List[Request]:
         """One arrival-driven engine round: sync the clock, admit every
         arrived request the policy picks, run one ``step()``.  Returns the
-        requests that FINISHED during this poll (possibly empty).  With the
+        requests that FINISHED during this poll (possibly empty) plus any
+        requests finalized OUTSIDE a step since the last poll: shed
+        submissions (``req.shed`` with a ``retry_after`` hint) and queued
+        requests whose deadline passed during an admission pass.  With the
         simulated clock an idle engine jumps straight to the next arrival;
         with a real clock it returns immediately and the caller re-polls."""
         if self._clock is not None:
             self.now = self._clock()
+        out = self._returned
+        self._returned = []
         self._admit_arrived()
         if all(s is None for s in self.slots):
             nxt = self.scheduler.next_arrival()
             if nxt is None:
-                return []                   # fully drained
+                return out                  # fully drained
             if self._clock is not None:
                 # Real time hasn't caught up to the next arrival: nap
                 # (capped) instead of letting drain() busy-spin a core
                 # through the inter-arrival gap.
                 if nxt > self.now:
                     time.sleep(min(nxt - self.now, 0.01))
-                return []
+                return out
             self.now = max(self.now, nxt)
             self._admit_arrived()
         self.step()
-        return list(self._just_finished)
+        return out + list(self._just_finished)
 
     def drain(self) -> List[Request]:
-        """Poll until the queue and every slot are empty; returns finished
-        requests in completion order."""
+        """Poll until the queue, every slot, and the returned buffer are
+        empty; returns finished requests in completion order."""
         finished: List[Request] = []
         while (len(self.scheduler)
-               or any(s is not None for s in self.slots)):
+               or any(s is not None for s in self.slots)
+               or self._returned):
             finished.extend(self.poll())
         return finished
 
@@ -646,10 +1132,12 @@ class ServingEngine:
         completion under the engine's policy (FCFS by default, matching the
         historical behavior bit-for-bit for greedy same-seed workloads).
         Oversized requests are rejected up front (marked done, nothing
-        generated) rather than crashing the serve loop mid-flight."""
+        generated) rather than crashing the serve loop mid-flight; SHED
+        requests surface through drain()'s polls, not here, so nothing is
+        returned twice."""
         finished: List[Request] = []
         for r in requests:
-            if not self.submit(r):
+            if not self.submit(r) and not r.shed:
                 finished.append(r)
         finished.extend(self.drain())
         return finished

@@ -43,6 +43,11 @@ class RequestMetrics:
     corrupted: bool = False     # some token was generated while an
                                 # injected fault was active and unrepaired
     requeues: int = 0           # times evicted + requeued by fault recovery
+    preempts: int = 0           # times evicted under page-pool pressure
+    resumes: int = 0            # re-admissions after a preemption
+    shed: bool = False          # dropped by admission backpressure (a shed
+                                # request is a rejection for conservation)
+    retry_after: Optional[float] = None     # backoff hint stamped when shed
 
     @property
     def ttft(self) -> Optional[float]:
@@ -105,6 +110,13 @@ class ServingMetrics:
         self.ticks = 0
         self._utilization: List[float] = []
         self._queue_depth: List[int] = []
+        # Paged-pool gauges (engine feeds a PoolStats per tick when paged).
+        self._pool_pressure: List[float] = []
+        self._pool_occupancy: List[float] = []
+        self.pool_last = None       # last PoolStats observed (cumulative
+                                    # prefix_hits / cow_copies / evictions)
+        self.degraded_ticks = 0
+        self.degraded_transitions = 0
         # Fault-tolerance counters (serving.faults / engine recovery).
         self.faults: Dict[str, int] = {
             "injected": 0,
@@ -141,7 +153,13 @@ class ServingMetrics:
         if r is None or r.finish_time is not None or r.rejected:
             # Direct try_admit() (no submit) with a reused uid: start fresh.
             r = self.requests[uid] = RequestMetrics(uid=uid)
-        r.admit_time = now
+        if r.admit_time is None:
+            r.admit_time = now
+        if r.preempts > r.resumes:
+            # This admission closes an open preemption: the request is
+            # back in a slot (recompute resume), so the per-request
+            # ``preempts - resumes in {0, 1}`` invariant holds again.
+            r.resumes += 1
         if tenant is not None:
             r.tenant = tenant
         if prompt_len is not None:
@@ -182,6 +200,31 @@ class ServingMetrics:
         r.n_tokens = 0
         r.corrupted = False
 
+    def on_preempt(self, uid: int, now: float) -> None:
+        """The engine evicted this in-flight request under page-pool
+        pressure; it keeps every token already streamed (they are valid —
+        recompute resumes the identical stream) and waits in the queue."""
+        self._req(uid).preempts += 1
+
+    def on_shed(self, uid: int, *, tenant: str = "default",
+                retry_after: Optional[float] = None) -> None:
+        """Admission backpressure dropped this request at submit: it was
+        never queued, counts as rejected for conservation, and carries the
+        retry-after hint surfaced to the client."""
+        self.requests[uid] = RequestMetrics(
+            uid=uid, tenant=tenant, rejected=True, shed=True,
+            retry_after=retry_after)
+
+    def on_prefix(self, n_pages: int) -> None:
+        """``n_pages`` cached prompt pages attached instead of prefilled
+        (the cumulative pool-side counter lives in PoolStats)."""
+
+    def on_cow(self) -> None:
+        """One copy-on-write page split (cumulative count in PoolStats)."""
+
+    def on_degraded(self, entered: bool, now: float) -> None:
+        self.degraded_transitions += 1
+
     def on_fault(self, kind: str) -> None:
         self.faults["injected"] += 1
         self.faults[f"injected_{kind}"] += 1
@@ -194,10 +237,17 @@ class ServingMetrics:
         self.faults[action] += int(n)
 
     def on_tick(self, now: float, live: int, capacity: int,
-                queue_depth: int) -> None:
+                queue_depth: int, *, pool=None, degraded: bool = False
+                ) -> None:
         self.ticks += 1
         self._utilization.append(live / max(1, capacity))
         self._queue_depth.append(queue_depth)
+        if pool is not None:
+            self._pool_pressure.append(pool.pressure)
+            self._pool_occupancy.append(pool.occupancy)
+            self.pool_last = pool
+        if degraded:
+            self.degraded_ticks += 1
 
     # -- summaries ---------------------------------------------------------
     def finished(self) -> List[RequestMetrics]:
@@ -232,19 +282,35 @@ class ServingMetrics:
         return good / duration
 
     def conservation(self) -> Dict:
-        """The invariant every fault trace must preserve: after drain,
-        ``submitted == completed + rejected + timed_out`` — a request can
-        be evicted and requeued any number of times, but it is never lost.
-        (In-flight/queued requests make the identity a ``<=`` mid-run.)"""
-        vals = self.requests.values()
+        """The invariant every fault OR overload trace must preserve: after
+        drain, ``submitted == completed + rejected + timed_out`` — a
+        request can be evicted, preempted, and requeued any number of
+        times, but it is never lost.  (In-flight/queued requests make the
+        identity a ``<=`` mid-run.)
+
+        With preemption the identity extends per request: every preemption
+        is closed by exactly one resume or by a timeout —
+        ``preempts - resumes in {0, 1}``, and the unresumed case implies
+        ``timed_out`` (``preempt_ok``).  Shed requests count as rejected."""
+        vals = list(self.requests.values())
         completed = sum(1 for r in vals if r.finish_time is not None)
         rejected = sum(1 for r in vals if r.rejected)
         timed_out = sum(1 for r in vals if r.timed_out)
+        preempted = sum(r.preempts for r in vals)
+        resumed = sum(r.resumes for r in vals)
+        preempt_ok = all(
+            r.preempts - r.resumes in (0, 1)
+            and (r.preempts == r.resumes or r.timed_out)
+            for r in vals)
         return {
             "submitted": len(self.requests),
             "completed": completed,
             "rejected": rejected,
             "timed_out": timed_out,
+            "shed": sum(1 for r in vals if r.shed),
+            "preempted": preempted,
+            "resumed": resumed,
+            "preempt_ok": preempt_ok,
             "ok": len(self.requests) == completed + rejected + timed_out,
         }
 
@@ -259,12 +325,28 @@ class ServingMetrics:
                 "finished": len(fin),
                 "rejected": cons["rejected"],
                 "timed_out": cons["timed_out"],
+                "shed": cons["shed"],
+                "preempted": cons["preempted"],
+                "resumed": cons["resumed"],
                 "requeued": sum(1 for r in self.requests.values()
                                 if r.requeues > 0),
                 "corrupted": sum(1 for r in self.requests.values()
                                  if r.corrupted),
                 "conservation_ok": cons["ok"],
+                "preempt_ok": cons["preempt_ok"],
             },
+            "pool": (None if self.pool_last is None else {
+                "num_pages": self.pool_last.num_pages,
+                "page_size": self.pool_last.page_size,
+                "pressure_mean": float(np.mean(self._pool_pressure)),
+                "pressure_max": float(np.max(self._pool_pressure)),
+                "occupancy_mean": float(np.mean(self._pool_occupancy)),
+                "prefix_hits": self.pool_last.prefix_hits,
+                "prefix_evictions": self.pool_last.prefix_evictions,
+                "cow_copies": self.pool_last.cow_copies,
+                "degraded_ticks": self.degraded_ticks,
+                "degraded_transitions": self.degraded_transitions,
+            }),
             "faults": dict(self.faults),
             "straggler": (
                 None if self.straggler is None else {

@@ -6,9 +6,14 @@ request to admit; only requests that have *arrived* (``arrival_time <=
 now``) are eligible, so the same scheduler drives both the simulated-clock
 open-loop path (deterministic tests, trace replay) and wall-clock serving.
 
-Policies are preemption-free — they decide admission ORDER only; once a
-request holds a slot it runs to completion over the existing prefill
-buckets.
+Policies decide admission ORDER; the queue itself is preemption-AWARE:
+the paged engine requeues preempted requests here (``requeue`` preserves
+arrival order, so a victim re-admits ahead of younger traffic), peeks the
+head under an admissibility filter for priority page claims, and can
+``remove`` a specific request it is about to admit by preempting a victim.
+``pop``/``peek`` accept an optional ``admissible`` predicate — requests
+failing it (per-tenant page quota, pool exhaustion) are SKIPPED, not
+dequeued, so a blocked tenant never head-of-line blocks the rest.
 
   * ``fcfs``      — first-come-first-served on (arrival_time, submit order).
   * ``sjf``       — shortest-prompt-first among arrived requests (minimizes
@@ -79,17 +84,35 @@ class Scheduler(abc.ABC):
             self._order.pop(id(r))
         return out
 
-    def pop(self, now: float) -> Optional["Request"]:
+    def _arrived(self, now: float, admissible=None) -> List["Request"]:
+        out = [r for r in self._queue if r.arrival_time <= now]
+        if admissible is not None:
+            out = [r for r in out if admissible(r)]
+        return out
+
+    def peek(self, now: float, admissible=None) -> Optional["Request"]:
+        """The request ``pop`` would return, without removing it — the
+        engine's priority-claim path peeks before deciding to preempt."""
+        arrived = self._arrived(now, admissible)
+        return min(arrived, key=self._key) if arrived else None
+
+    def pop(self, now: float, admissible=None) -> Optional["Request"]:
         """Remove and return the next request to admit, or None if nothing
-        has arrived by ``now``."""
-        arrived = [r for r in self._queue if r.arrival_time <= now]
+        has arrived by ``now`` (or nothing passes ``admissible``)."""
+        arrived = self._arrived(now, admissible)
         if not arrived:
             return None
         req = min(arrived, key=self._key)
+        self.remove(req)
+        return req
+
+    def remove(self, req: "Request") -> None:
+        """Dequeue a specific request the engine is admitting out-of-band
+        (priority claim after preempting a victim); fires ``_on_pop`` so
+        per-tenant fairness accounting stays consistent."""
         self._queue.remove(req)
         self._order.pop(id(req))
         self._on_pop(req)
-        return req
 
     def _on_pop(self, req: "Request") -> None:
         """Policy hook: called after ``req`` is chosen for admission."""

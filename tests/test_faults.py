@@ -305,7 +305,8 @@ def test_deadline_cancels_inflight_and_frees_slot(tinyllama):
     assert reqs[0] in done and reqs[1] in done  # timeout surfaced via poll
     cons = eng.metrics.conservation()
     assert cons == {"submitted": 2, "completed": 1, "rejected": 0,
-                    "timed_out": 1, "ok": True}
+                    "timed_out": 1, "shed": 0, "preempted": 0,
+                    "resumed": 0, "preempt_ok": True, "ok": True}
     assert eng.metrics.requests[0].timed_out
 
 

@@ -357,3 +357,109 @@ if HAVE_HYPOTHESIS:
         bin_scale = n * abfp.quant_delta(14) * float(
             jnp.abs(x).max() * jnp.abs(w).max())
         assert eg <= e1 + bin_scale + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Overload traces: paged pool + preemption + quotas (seeded — always run)
+# ---------------------------------------------------------------------------
+
+
+def _overload_trace(seed, n=14, *, deadlines=True):
+    """Bursty 3-tenant trace (mean gap 0.4 ticks) that saturates a 3-page
+    pool: mixed priorities, deadlines on every third request."""
+    rng = np.random.default_rng(100 + seed)
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(0.4))
+        plen = int(rng.integers(2, 10))
+        reqs.append(Request(
+            uid=i, prompt=[1 + (i + j) % 97 for j in range(plen)],
+            max_new_tokens=int(rng.integers(2, 6)),
+            arrival_time=round(t, 3),
+            priority=int(rng.integers(0, 3)),
+            tenant=f"t{int(rng.integers(3))}",
+            deadline=(round(t, 3) + 20.0)
+            if (deadlines and i % 3 == 0) else None))
+    return reqs
+
+
+def _check_overload_run(params, mcfg, reqs, ref_reqs, *, pool_pages,
+                        tenant_quota, expect_preemption):
+    kw = dict(capacity=3, max_len=32, prefill_chunks=(4, 8), paged=True,
+              page_size=8, policy="priority")
+    tight = ServingEngine(params, mcfg, pool_pages=pool_pages,
+                          tenant_quota=tenant_quota, **kw)
+    done = tight.run(reqs)
+    cons = tight.metrics.conservation()
+
+    # Conservation extended with preemption: every preempted request was
+    # resumed or timed out, nothing lost, nothing double-counted.
+    assert cons["ok"] and cons["preempt_ok"]
+    assert cons["resumed"] <= cons["preempted"]
+    if expect_preemption:
+        assert cons["preempted"] > 0
+    assert len(done) == len(reqs) and all(r.done for r in reqs)
+    assert tight.pool.stats().held == 0
+
+    # No starvation under quota: a request without a deadline can be
+    # preempted and throttled but never dropped — it always completes.
+    for r in done:
+        if r.deadline is None:
+            assert len(r.generated) == r.max_new_tokens
+
+    # Preempted requests resume BIT-IDENTICALLY: greedy decode of every
+    # non-timed-out request matches a roomy no-deadline reference run.
+    roomy = ServingEngine(params, mcfg, **kw)
+    ref = {r.uid: list(r.generated) for r in roomy.run(ref_reqs)}
+    for r in done:
+        if not r.timed_out:
+            assert list(r.generated) == ref[r.uid], r.uid
+
+
+@pytest.mark.overload
+@pytest.mark.parametrize("seed", range(4))
+def test_overload_trace_preemption_properties(engine_setup, seed):
+    """Saturating trace against a 3-page pool (each request needs up to 2
+    pages, 3 slots): preemption MUST fire, conservation + preempt_ok hold,
+    no-deadline requests always complete, resumes are bit-exact."""
+    mcfg, params = engine_setup
+    _check_overload_run(params, mcfg, _overload_trace(seed),
+                        _overload_trace(seed, deadlines=False),
+                        pool_pages=3, tenant_quota=2,
+                        expect_preemption=True)
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def overload_traces(draw):
+        n = draw(st.integers(4, 12))
+        gaps = draw(st.lists(st.floats(0.0, 1.0), min_size=n, max_size=n))
+        arrivals = np.cumsum(gaps)
+        return [Request(
+            uid=i,
+            prompt=[1 + (i + j) % 97
+                    for j in range(draw(st.integers(1, 9)))],
+            max_new_tokens=draw(st.integers(1, 5)),
+            arrival_time=float(round(arrivals[i], 3)),
+            priority=draw(st.integers(0, 2)),
+            tenant=f"t{draw(st.integers(0, 2))}",
+            deadline=(float(round(arrivals[i], 3)) + 20.0)
+            if draw(st.booleans()) else None)
+            for i in range(n)]
+
+    @given(trace=overload_traces())
+    @settings(max_examples=8, deadline=None)
+    @pytest.mark.overload
+    def test_overload_trace_preemption_hypothesis(engine_setup, trace):
+        mcfg, params = engine_setup
+        import copy
+        ref_reqs = copy.deepcopy(trace)
+        for r in ref_reqs:
+            r.deadline = None
+        # Preemption fires only when the trace actually saturates the
+        # pool, so it is not asserted here — the invariants must hold
+        # either way (hypothesis shrinks to quiet traces too).
+        _check_overload_run(params, mcfg, trace, ref_reqs,
+                            pool_pages=3, tenant_quota=2,
+                            expect_preemption=False)

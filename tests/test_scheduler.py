@@ -134,8 +134,9 @@ def test_metrics_hand_computed():
     assert r.tpot == pytest.approx((6.0 - 3.0) / 2)   # 2 inter-token gaps
     s = m.summary()
     assert s["requests"] == {"submitted": 1, "finished": 1, "rejected": 0,
-                             "timed_out": 0, "requeued": 0, "corrupted": 0,
-                             "conservation_ok": True}
+                             "timed_out": 0, "shed": 0, "preempted": 0,
+                             "resumed": 0, "requeued": 0, "corrupted": 0,
+                             "conservation_ok": True, "preempt_ok": True}
     assert s["ttft"]["p50"] == 2.0 and s["ttft"]["n"] == 1
     # goodput: 1 request over the arrival->finish span of 5 ticks
     assert m.goodput(slo_ttft=2.0) == pytest.approx(1 / 5)
@@ -464,3 +465,114 @@ def test_capacity_one_drained_unpolled_slot_frees_for_manual_admit(tiny):
     while not b.done:
         eng.step()
     assert len(b.generated) == 2
+
+
+# ---------------------------------------------------------------------------
+# Requeue x expire interaction (fault recovery meets deadlines)
+# ---------------------------------------------------------------------------
+
+def test_requeued_request_past_deadline_times_out_not_readmitted(tiny):
+    """Regression: a request requeued by fault recovery whose deadline has
+    ALREADY passed must be timed out on the next admission pass — never
+    re-admitted into a slot (which would stamp a bogus admit_time and burn
+    a slot reset on a request that can only expire)."""
+    params, mcfg = tiny
+    eng = ServingEngine(params, mcfg, capacity=1, max_len=32,
+                        prefill_chunks=(8,))
+    r = _req(0, plen=4, arrival=0.0, max_new=8, deadline=3.0)
+    assert eng.submit(r)
+    eng.poll()                              # admitted at t=0, prefill at t=1
+    admit0 = eng.metrics.requests[0].admit_time
+    assert admit0 == 0.0 and not r.done
+    # Fault-recovery eviction: slot state is discarded and the request goes
+    # back through the scheduler with arrival order preserved.
+    eng.slots = [None] * eng.capacity
+    r.prompt_pos = 0
+    r.generated.clear()
+    eng.metrics.on_requeue(r.uid)
+    eng.scheduler.requeue(r)
+    eng.now = 5.0                           # deadline (3.0) already past
+    done = eng.drain()
+    assert [x.uid for x in done] == [0]
+    assert r.timed_out and r.done and not r.generated
+    rec = eng.metrics.requests[0]
+    assert rec.timed_out and rec.n_tokens == 0
+    # Not re-admitted: admit_time keeps its original stamp instead of being
+    # overwritten by a doomed re-admission after the deadline.
+    assert rec.admit_time == admit0
+    assert eng.metrics.conservation()["ok"]
+
+
+# ---------------------------------------------------------------------------
+# Admission-filter plumbing + paged fits() relaxation + backpressure
+# ---------------------------------------------------------------------------
+
+def test_peek_matches_pop_and_remove_keeps_fairness():
+    s = get_scheduler("priority")
+    s.add(_req(0, tenant="a", priority=1))
+    s.add(_req(1, tenant="a", priority=1))
+    s.add(_req(2, tenant="b", priority=1))
+    head = s.peek(0.0)
+    assert head.uid == 0 and len(s) == 3    # peek never dequeues
+    s.remove(head)                          # out-of-band admit (page claim)
+    # remove() fired the fairness hook: tenant "a" now trails "b", so the
+    # round-robin key admits b's request before a's second one.
+    assert s.pop(0.0).uid == 2
+    assert s.pop(0.0).uid == 1
+
+
+def test_pop_admissible_skips_without_dequeuing():
+    s = get_scheduler("fcfs")
+    s.add(_req(0, tenant="blocked"))
+    s.add(_req(1, tenant="ok"))
+    ok = lambda r: r.tenant != "blocked"
+    assert s.peek(0.0, ok).uid == 1
+    assert s.pop(0.0, ok).uid == 1
+    assert s.pop(0.0, ok) is None           # blocked head is skipped...
+    assert len(s) == 1                      # ...but never dequeued
+    assert s.pop(0.0).uid == 0              # unfiltered pop still sees it
+
+
+def test_fits_legacy_vs_paged_budget(tiny):
+    """Satellite: the hard ``prompt + max_new <= max_len`` reject only
+    applies to the unpaged engine; under paging, admission is a PAGE
+    budget check (``max_pages * page_size`` addressable tokens)."""
+    params, mcfg = tiny
+    legacy = ServingEngine(params, mcfg, capacity=1, max_len=40,
+                           prefill_chunks=(8,))
+    paged = ServingEngine(params, mcfg, capacity=1, max_len=40,
+                          prefill_chunks=(8,), paged=True, page_size=16)
+    over = _req(0, plen=30, max_new=14)     # 44 tokens: over max_len...
+    assert not legacy.fits(over)
+    assert paged.fits(over)                 # ...but within 3 pages x 16
+    way_over = _req(1, plen=40, max_new=12)     # 52 > 48 addressable
+    assert not paged.fits(way_over)
+    assert not legacy.fits(_req(2, plen=0))     # empty prompt: both reject
+    assert not paged.fits(_req(3, plen=0))
+
+
+@pytest.mark.overload
+def test_backpressure_pool_watermark_sheds_on_arrival(tiny):
+    """Pool-pressure shedding: with every page held and the queue at
+    capacity, a newly ARRIVED request is shed with a retry hint instead of
+    queued; pre-dated trace submissions (arrival in the future) are never
+    shed at submit time."""
+    params, mcfg = tiny
+    eng = ServingEngine(params, mcfg, capacity=1, max_len=32,
+                        prefill_chunks=(8,), paged=True, page_size=16,
+                        pool_pages=2, page_watermarks=(0.5, 0.25))
+    assert eng.submit(_req(0, plen=20, max_new=6))
+    for _ in range(4):                      # prefill: slot 0 holds 2/2 pages
+        eng.poll()
+    assert eng.pool.pressure() >= 0.5
+    assert eng.submit(_req(1, plen=8, max_new=2))       # queue below depth
+    future = _req(2, plen=8, max_new=2, arrival=eng.now + 100.0)
+    assert eng.submit(future) and not future.shed       # not arrived yet
+    now_req = _req(3, plen=8, max_new=2, arrival=eng.now)
+    assert not eng.submit(now_req)
+    assert now_req.shed and now_req.retry_after is not None
+    shed_polled = [r for r in eng.poll() if r.shed]
+    assert [r.uid for r in shed_polled] == [3]
+    eng.drain()                             # clock jumps to uid=2's arrival
+    cons = eng.metrics.conservation()
+    assert cons["shed"] == 1 and cons["ok"]

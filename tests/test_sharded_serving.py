@@ -44,10 +44,10 @@ PACKED = QuantConfig(mode="abfp_packed", tile_width=32, gain=4.0,
                      noise_lsb=0.5)
 
 
-def _serve(mcfg, params, quant, mesh, *, max_new=4, max_len=32):
+def _serve(mcfg, params, quant, mesh, *, max_new=4, max_len=32, **ekw):
     eng = ServingEngine(params, mcfg, capacity=4, max_len=max_len,
                         quant=quant, seed=0, prefill_chunks=(4, 8),
-                        mesh=mesh)
+                        mesh=mesh, **ekw)
     reqs = [Request(uid=i, prompt=list(p), max_new_tokens=max_new)
             for i, p in enumerate(PROMPTS)]
     done = eng.run(reqs)
@@ -89,6 +89,26 @@ def test_packed_parity_bit_identical(tinyllama, tinyllama_base_packed,
     mesh = jax.make_mesh(shape, ("data", "model"))
     got = _serve(*tinyllama, PACKED, mesh)
     assert got == tinyllama_base_packed, shape
+
+
+@pytest.mark.parametrize("shape", MESH_SHAPES)
+def test_paged_parity_bit_identical(tinyllama, tinyllama_base_float, shape):
+    """Paged decode (replicated page pool, dp-sharded page table) is
+    bit-identical to the UNPAGED single-device float baseline at every
+    PR-4 mesh shape — the page-table gather must not change a single
+    logit under either sharding axis."""
+    mesh = jax.make_mesh(shape, ("data", "model"))
+    got = _serve(*tinyllama, FLOAT, mesh, paged=True, page_size=16)
+    assert got == tinyllama_base_float, shape
+
+
+def test_paged_packed_parity_on_mesh(tinyllama, tinyllama_base_packed):
+    """abfp_packed + paged KV at the largest mesh shape: tokens identical
+    to the single-device UNPAGED packed engine (seeded ADC noise and the
+    quantized KV pool both survive the indirection)."""
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    got = _serve(*tinyllama, PACKED, mesh, paged=True, page_size=32)
+    assert got == tinyllama_base_packed
 
 
 @pytest.mark.parametrize("shape", [(1, 2), (2, 4)])
