@@ -16,7 +16,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: lint test-fast test test-slow test-dist test-faults test-overload bench bench-smoke bench-serving bench-faults bench-overload
+.PHONY: lint test-fast test test-slow test-dist test-faults test-overload test-fleet bench bench-smoke bench-serving bench-faults bench-overload bench-fleet
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \
@@ -85,3 +85,14 @@ test-overload:
 # beat the unpaged baseline at every point) -> BENCH_serving_overload.json.
 bench-overload:
 	$(PY) benchmarks/bench_serving.py --overload-only
+
+# Heterogeneous-fleet suite: ModelRunner families (decoder / recurrent /
+# enc-dec), multi-model multiplexed serving, per-model conservation.
+test-fleet:
+	$(PY) -m pytest -q -m fleet
+
+# Fleet bench + per-arch serving-path quality grid (ABFP logits vs float
+# inside the envelope) -> BENCH_serving_fleet.json.  Exits nonzero on a
+# per-model conservation failure or a quality miss — the CI fleet gate.
+bench-fleet:
+	$(PY) benchmarks/bench_serving.py --fleet-only

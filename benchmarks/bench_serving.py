@@ -398,6 +398,211 @@ def overload_gate(rows) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Heterogeneous fleet: multiplexed multi-model serving + per-arch quality grid
+# ---------------------------------------------------------------------------
+
+FLEET_ARCHS = ("whisper-base", "recurrentgemma-2b", "xlstm-350m")
+
+# Serving-path numerics envelope: ABFP(+read noise) logits on the runner
+# prefill/decode path must track float within this normalized error
+# (median |l_q - l_f| over the float logit std).  Top-1 agreement is
+# recorded but NOT gated: smoke models are untrained, so near-uniform
+# logits make argmax flips noise, not signal.
+FLEET_QUALITY_ENVELOPE = 0.35
+
+
+def _fleet_models(archs, seed) -> dict:
+    models = {}
+    for i, a in enumerate(archs):
+        cfg = smoke_config(a)
+        models[a] = (init_params(jax.random.PRNGKey(seed + i), cfg), cfg)
+    return models
+
+
+def _fleet_features(runner, seed, uid):
+    from repro.models import frontends
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), uid)
+    return np.asarray(
+        frontends.audio_stub_features(
+            key, 1, runner.enc_len, runner.mcfg.d_model)[0], np.float32)
+
+
+def _fleet_workload(models, runners, *, n_per_model, prompt_len, max_new,
+                    seed) -> list:
+    """Round-robin across models so every tick interleaves lanes; enc-dec
+    requests carry per-request stub frontend features."""
+    rng = np.random.default_rng(seed)
+    names = list(models)
+    reqs = []
+    for i in range(n_per_model * len(names)):
+        name = names[i % len(names)]
+        mcfg = models[name][1]
+        r = Request(uid=i,
+                    prompt=rng.integers(1, mcfg.vocab_size,
+                                        prompt_len).tolist(),
+                    max_new_tokens=max_new, model=name)
+        if runners[name].needs_admission:
+            r.features = _fleet_features(runners[name], seed, i)
+        reqs.append(r)
+    return reqs
+
+
+def bench_fleet(models, *, mode, seed, n_per_model=4, prompt_len=8,
+                max_new=4, max_len=64, capacity_per_model=2) -> dict:
+    """Multiplexed fleet vs sequential per-model serving of the SAME
+    workload.  Multiplexed: one FleetEngine, shared clock, round-robin
+    lanes.  Sequential: one single-model engine per arch, run back to
+    back.  Reports per-arch TTFT/TPOT through the fleet lanes plus the
+    tick and wall-throughput comparison; asserts per-model request
+    conservation on the multiplexed run."""
+    from repro.serving.runners import runner_for
+
+    names = list(models)
+    runners = {n: runner_for(cfg) for n, (_, cfg) in models.items()}
+    chunks = (4, 8)
+
+    fleet = ServingEngine(
+        models={n: (models[n][0], models[n][1], runners[n]) for n in names},
+        capacity=capacity_per_model * len(names), max_len=max_len,
+        quant=_quant(mode), seed=seed, chunked=True, prefill_chunks=chunks)
+    reqs = _fleet_workload(models, runners, n_per_model=n_per_model,
+                           prompt_len=prompt_len, max_new=max_new, seed=seed)
+    t0 = time.perf_counter()
+    done = fleet.run(reqs)
+    mux_wall = time.perf_counter() - t0
+    mux_ticks = fleet.ticks
+    mux_tokens = sum(len(r.generated) for r in done)
+    cons = fleet.conservation()
+    summaries = fleet.summary()
+
+    per_arch = []
+    for n in names:
+        s, c = summaries[n], cons[n]
+        def _r(v):
+            return None if v is None else round(float(v), 4)
+
+        per_arch.append({
+            "arch": n, "runner": type(runners[n]).__name__,
+            "slots": fleet.lanes[n].capacity,
+            "ttft_p50": _r(s["ttft"]["p50"]),
+            "ttft_p99": _r(s["ttft"]["p99"]),
+            "tpot_p50": _r(s["tpot"]["p50"]),
+            "completed": c["completed"], "submitted": c["submitted"],
+            "preempted": c["preempted"],
+            "conservation_ok": bool(c["ok"])})
+
+    # Sequential baseline: same per-model workload through isolated
+    # single-model engines, one after another.
+    seq_wall, seq_ticks, seq_tokens = 0.0, 0, 0
+    for n in names:
+        eng = ServingEngine(models[n][0], models[n][1], runner=runners[n],
+                            capacity=capacity_per_model, max_len=max_len,
+                            quant=_quant(mode), seed=seed, chunked=True,
+                            prefill_chunks=chunks)
+        sub = [r for r in _fleet_workload(
+            models, runners, n_per_model=n_per_model, prompt_len=prompt_len,
+            max_new=max_new, seed=seed) if r.model == n]
+        t0 = time.perf_counter()
+        fin = eng.run(sub)
+        seq_wall += time.perf_counter() - t0
+        seq_ticks += eng.ticks
+        seq_tokens += sum(len(r.generated) for r in fin)
+
+    return {
+        "archs": names, "mode": mode, "n_requests": len(reqs),
+        "per_arch": per_arch,
+        "multiplexed": {"ticks": mux_ticks, "wall_s": round(mux_wall, 3),
+                        "tokens": mux_tokens,
+                        "tok_per_s": round(mux_tokens / max(mux_wall, 1e-9),
+                                           1)},
+        "sequential": {"ticks": seq_ticks, "wall_s": round(seq_wall, 3),
+                       "tokens": seq_tokens,
+                       "tok_per_s": round(seq_tokens / max(seq_wall, 1e-9),
+                                          1)},
+        "conservation_ok": bool(all(c["ok"] for c in cons.values())),
+    }
+
+
+def fleet_quality_rows(models, *, seed, prompt_len=16,
+                       envelope=FLEET_QUALITY_ENVELOPE) -> list:
+    """Reduced DNF-style accuracy grid over the SERVING path: for each
+    arch, prefill one prompt through the runner's own closures in float
+    and in ABFP(+0.5 LSB read noise) and compare last-token logits —
+    normalized rel_err must stay inside the envelope.  Also reports the
+    per-layer differential-noise stds (core.dnf over forward_capture) so
+    regressions point at the offending layer, and top-1 agreement
+    (recorded, not gated — see FLEET_QUALITY_ENVELOPE)."""
+    import jax.numpy as jnp
+
+    from repro.core.dnf import NoiseHistogram
+    from repro.models import forward_capture
+    from repro.models.layers import Numerics
+    from repro.serving.runners import runner_for
+
+    qa = QuantConfig(mode="abfp_ref", tile_width=32, gain=8.0, noise_lsb=0.5)
+    rows = []
+    for name, (params, mcfg) in models.items():
+        runner = runner_for(mcfg)
+        rng = np.random.default_rng(seed)
+        prompt = rng.integers(1, mcfg.vocab_size, prompt_len)
+        tokens = jnp.asarray(prompt[None])
+        n_tok = jnp.full((1,), prompt_len, jnp.int32)
+        feats = (_fleet_features(runner, seed, 0)
+                 if runner.needs_admission else None)
+        akey = jax.random.PRNGKey(seed + 7)
+
+        def last_logits(quant):
+            state = runner.init_state(1, 2 * prompt_len)
+            if runner.needs_admission:
+                state = runner.make_admit(quant, None)(
+                    params, state, jnp.asarray(feats), jnp.int32(0), akey)
+            logits, _ = jax.jit(runner.make_prefill(quant, None))(
+                params, state, tokens, n_tok, jax.random.PRNGKey(seed))
+            return np.asarray(logits[0], np.float32)
+
+        lf = last_logits(QuantConfig(mode="float"))
+        lq = last_logits(qa)
+        rel_err = float(np.median(np.abs(lq - lf)) / max(lf.std(), 1e-9))
+        top1 = bool(int(lf.argmax()) == int(lq.argmax()))
+
+        # Per-layer differential noise on the same prompt (paper Fig. 3
+        # capture, reused from the DNF pipeline).
+        counter = [0]
+
+        def _factory():
+            counter[0] += 1
+            return Numerics(qa, jax.random.fold_in(
+                jax.random.PRNGKey(seed + 13), counter[0]))
+
+        _, deltas = forward_capture(
+            params, tokens, mcfg, Numerics(QuantConfig(mode="float"),
+                                           jax.random.PRNGKey(seed)),
+            _factory,
+            encoder_features=(jnp.asarray(feats)[None]
+                              if feats is not None else None))
+        layer_stds = [round(float(NoiseHistogram.fit(d).std), 6)
+                      for d in deltas]
+
+        rows.append({
+            "arch": name, "runner": type(runner).__name__,
+            "prompt_len": prompt_len, "quant": "abfp_ref t32 g8 n0.5",
+            "rel_err": round(rel_err, 4), "envelope": envelope,
+            "top1_agree": top1,
+            "dnf_layer_std": layer_stds,
+            "pass": bool(rel_err <= envelope)})
+    return rows
+
+
+def fleet_gate(fleet_row, quality_rows) -> bool:
+    """Per-model conservation on the multiplexed run AND every arch's
+    serving-path ABFP logits inside the quality envelope."""
+    return bool(fleet_row["conservation_ok"]
+                and all(r["completed"] == r["submitted"]
+                        for r in fleet_row["per_arch"])
+                and all(q["pass"] for q in quality_rows))
+
+
+# ---------------------------------------------------------------------------
 # Per-mesh-shape sweep: sharded serving throughput at forced CPU meshes
 # ---------------------------------------------------------------------------
 
@@ -508,6 +713,19 @@ def main() -> None:
     ap.add_argument("--no-overload-sweep", action="store_true",
                     help="skip the capacity gate + overload sweep on "
                          "full runs")
+    ap.add_argument("--fleet-only", action="store_true",
+                    help="run ONLY the heterogeneous-fleet bench (whisper + "
+                         "recurrentgemma + xlstm multiplexed on one engine) "
+                         "plus the per-arch serving-path quality grid and "
+                         "write BENCH_serving_fleet.json; exits nonzero on "
+                         "per-model conservation failure or a quality-"
+                         "envelope miss (the CI fleet gate)")
+    ap.add_argument("--fleet-archs", default=None,
+                    help="comma-separated archs for the fleet bench "
+                         "(default whisper-base,recurrentgemma-2b,"
+                         "xlstm-350m)")
+    ap.add_argument("--no-fleet", action="store_true",
+                    help="skip the fleet bench + quality grid on full runs")
     args = ap.parse_args()
 
     if args.mesh_one:
@@ -551,6 +769,53 @@ def main() -> None:
                   "beat recovery-off at every rate")
             sys.exit(1)
         print("[bench_serving] fault gate OK")
+        return
+
+    fleet_archs = (tuple(a for a in args.fleet_archs.split(",") if a)
+                   if args.fleet_archs else FLEET_ARCHS)
+    if args.fleet_only:
+        models = _fleet_models(fleet_archs, args.seed)
+        print(f"[bench_serving] fleet only: archs={fleet_archs}")
+        fleet_row = bench_fleet(models, mode="float", seed=args.seed)
+        for r in fleet_row["per_arch"]:
+            print(f"  {r['arch']:20s} {r['runner']:15s} "
+                  f"ttft p50 {r['ttft_p50']} p99 {r['ttft_p99']}  "
+                  f"tpot p50 {r['tpot_p50']}  "
+                  f"completed {r['completed']}/{r['submitted']} "
+                  f"preempted {r['preempted']}")
+        print(f"  multiplexed {fleet_row['multiplexed']['ticks']} ticks "
+              f"({fleet_row['multiplexed']['tok_per_s']} tok/s) vs "
+              f"sequential {fleet_row['sequential']['ticks']} ticks "
+              f"({fleet_row['sequential']['tok_per_s']} tok/s)")
+        quality = fleet_quality_rows(models, seed=args.seed)
+        for q in quality:
+            print(f"  quality {q['arch']:20s} rel_err {q['rel_err']:.4f} "
+                  f"(envelope {q['envelope']})  top1_agree "
+                  f"{q['top1_agree']}  "
+                  f"{'OK' if q['pass'] else 'FAIL'}")
+        ok = fleet_gate(fleet_row, quality)
+        out = args.out
+        if out is None:
+            root = Path(__file__).resolve().parent.parent
+            out = str(root / "BENCH_serving_fleet.json")
+        Path(out).write_text(json.dumps({
+            "schema_version": SCHEMA_VERSION,
+            "benchmark": "serving_fleet",
+            "archs": list(fleet_archs), "reduced": True,
+            "backend": jax.default_backend(),
+            "fleet": fleet_row,
+            "quality": quality,
+            "gate": {"pass": bool(ok),
+                     "metric": "per-model conservation AND serving-path "
+                               "rel_err <= envelope per arch",
+                     "envelope": FLEET_QUALITY_ENVELOPE},
+        }, indent=2, default=str) + "\n")
+        print(f"[bench_serving] wrote {out}")
+        if not ok:
+            print("[bench_serving] fleet gate FAIL: conservation or "
+                  "quality envelope miss")
+            sys.exit(1)
+        print("[bench_serving] fleet gate OK")
         return
 
     overload_loads = (tuple(float(x) for x in args.overload_loads.split(","))
@@ -675,6 +940,22 @@ def main() -> None:
             print("[bench_serving] WARNING: overload gate failed "
                   "(capacity or goodput regression)")
 
+    fleet_block = None
+    if not args.smoke and not args.no_fleet:
+        print(f"[bench_serving] heterogeneous fleet bench "
+              f"(archs={fleet_archs})")
+        fmodels = _fleet_models(fleet_archs, args.seed)
+        fleet_row = bench_fleet(fmodels, mode="float", seed=args.seed)
+        quality = fleet_quality_rows(fmodels, seed=args.seed)
+        for q in quality:
+            print(f"  quality {q['arch']:20s} rel_err {q['rel_err']:.4f} "
+                  f"{'OK' if q['pass'] else 'FAIL'}")
+        fleet_block = {"fleet": fleet_row, "quality": quality,
+                       "gate_pass": bool(fleet_gate(fleet_row, quality))}
+        if not fleet_block["gate_pass"]:
+            print("[bench_serving] WARNING: fleet gate failed "
+                  "(conservation or quality envelope)")
+
     gate_ok = (speedups.get("float", 1.0) >= 1.0)
     result = {
         "schema_version": SCHEMA_VERSION,
@@ -689,6 +970,7 @@ def main() -> None:
         "fault_sweep": fault_rows,
         "capacity_gate": cap_row,
         "overload_sweep": over_rows,
+        "fleet": fleet_block,
     }
     if args.smoke:
         # Machine-readable gate verdict: CI uploads this artifact, so the

@@ -309,7 +309,9 @@ def serving_state_spec_tree(state: Pytree, mesh: Mesh) -> Pytree:
             # the slot batch): fully replicated so any data shard can gather
             # any page through its table rows.
             return P(*([None] * leaf.ndim))
-        stacked = "groups" in names
+        # "enc" leaves (cross-attention KV cached at admission) carry the
+        # same leading (n_groups,) scan axis as grouped decode state.
+        stacked = ("groups" in names) or ("enc" in names)
         nd = leaf.ndim - (1 if stacked else 0)
         if nd <= 0:
             return P(*([None] * leaf.ndim))

@@ -46,10 +46,11 @@ from typing import List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.configs import get_config, smoke_config
+from repro.configs import get_config, list_archs, smoke_config
 from repro.core.abfp import QuantConfig
-from repro.models import init_params, param_count
+from repro.models import frontends, init_params, param_count
 from repro.serving import FaultConfig, Request, ServingEngine
+from repro.serving.runners import EncDecRunner, runner_for
 
 
 def parse_mesh(arg: Optional[str]) -> Optional[Tuple[int, int]]:
@@ -75,6 +76,53 @@ def force_host_devices(n: int) -> None:
     if n > 1 and "xla_force_host_platform_device_count" not in flags:
         os.environ["XLA_FLAGS"] = (
             f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+def resolve_archs(args) -> List[str]:
+    """Validated arch list: ``--archs a,b,c`` (fleet) or ``--arch`` (single).
+    Unknown names fail FAST with the registry listed — before any params
+    are initialized or jax warms up."""
+    names = ([a.strip() for a in args.archs.split(",") if a.strip()]
+             if args.archs else [args.arch])
+    known = sorted(list_archs())
+    bad = [a for a in names if a not in known]
+    if bad or not names:
+        what = f"unknown arch(es) {bad}" if bad else "no archs given"
+        raise SystemExit(
+            f"[serve] {what}; registered archs: {', '.join(known)}")
+    return names
+
+
+def parse_model_split(arg: Optional[str]) -> Optional[dict]:
+    """'name=slots,name=slots' -> {name: slots}; None passes through."""
+    if arg is None:
+        return None
+    out = {}
+    for part in arg.split(","):
+        if not part.strip():
+            continue
+        try:
+            name, slots = part.split("=")
+            out[name.strip()] = int(slots)
+        except ValueError:
+            raise SystemExit(
+                f"--model-split expects 'name=slots,...' (got {arg!r})")
+    return out or None
+
+
+def attach_features(reqs: List[Request], runners: dict, seed: int) -> None:
+    """Stub frontend features for requests routed to enc-dec lanes: each
+    request gets its own deterministic (enc_len, d_model) audio-frame
+    embedding keyed by (seed, uid)."""
+    for r in reqs:
+        runner = runners.get(r.model)
+        if not isinstance(runner, EncDecRunner):
+            continue
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), r.uid)
+        r.features = np.asarray(
+            frontends.audio_stub_features(
+                key, 1, runner.enc_len, runner.mcfg.d_model)[0],
+            np.float32)
 
 
 def poisson_workload(mcfg, args, rng: np.random.Generator) -> List[Request]:
@@ -115,9 +163,84 @@ def trace_workload(mcfg, args, rng: np.random.Generator) -> List[Request]:
     return reqs
 
 
+def serve_fleet(built: dict, quant: QuantConfig, mesh, args) -> None:
+    """Multi-model fleet serving: one lane per ``--archs`` entry on a
+    shared clock, requests routed round-robin across models (enc-dec lanes
+    get stub frontend features per request)."""
+    runners = {name: runner_for(cfg) for name, (_, cfg) in built.items()}
+    eng = ServingEngine(
+        models={name: (p, cfg, runners[name])
+                for name, (p, cfg) in built.items()},
+        capacity=args.capacity,
+        model_split=parse_model_split(args.model_split),
+        max_len=args.max_len, quant=quant, seed=args.seed,
+        chunked=not args.no_chunked, policy=args.policy,
+        prefill_chunks=tuple(int(c) for c in args.prefill_chunks.split(",")),
+        mesh=mesh, paged=args.paged, page_size=args.page_size,
+        pool_pages=args.pool_pages, prefix_cache=not args.no_prefix_cache)
+    lanes = {n: l.capacity for n, l in eng.lanes.items()}
+    print(f"[serve] fleet: {len(built)} models, slots {lanes}, "
+          f"quant={args.quant}, policy={args.policy}")
+
+    rng = np.random.default_rng(args.seed)
+    names = list(built)
+    if args.arrival_rate is not None or args.trace is not None:
+        reqs = (trace_workload(built[names[0]][1], args, rng) if args.trace
+                else poisson_workload(built[names[0]][1], args, rng))
+    else:
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(
+                            1, built[names[0]][1].vocab_size,
+                            args.prompt_len).tolist(),
+                        max_new_tokens=args.max_new,
+                        temperature=args.temperature)
+                for i in range(args.requests)]
+    for i, r in enumerate(reqs):
+        r.model = names[i % len(names)]
+        # Prompts must fit every lane's vocab (smallest wins).
+        vmax = built[r.model][1].vocab_size
+        r.prompt = [t % (vmax - 1) + 1 for t in r.prompt]
+    attach_features(reqs, runners, args.seed)
+
+    t0 = time.time()
+    done = eng.run(reqs)
+    dt = time.time() - t0
+    tokens = sum(len(r.generated) for r in done)
+    print(f"[serve] fleet: {len(done)} requests, {tokens} tokens in "
+          f"{dt:.1f}s ({tokens / max(dt, 1e-9):.1f} tok/s, "
+          f"{eng.ticks} ticks)")
+
+    def fmt(d, key):
+        v = d[key]
+        return "-" if v is None else f"{v:.2f}"
+
+    summaries = eng.summary()
+    cons = eng.conservation()
+    for name in names:
+        s, c = summaries[name], cons[name]
+        print(f"  {name}: TTFT p50 {fmt(s['ttft'], 'p50')} / "
+              f"p99 {fmt(s['ttft'], 'p99')} | TPOT p50 "
+              f"{fmt(s['tpot'], 'p50')} | completed "
+              f"{c['completed']}/{c['submitted']} "
+              f"(conservation_ok {c['ok']})")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump({"fleet": {n: summaries[n] for n in names},
+                       "conservation": cons}, f, indent=2, default=str)
+        print(f"[serve] wrote {args.metrics_out}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--arch", default="smollm-360m",
+                    help="model architecture (see repro.configs.list_archs)")
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated arch list — serve a MULTI-MODEL "
+                         "FLEET (one lane per arch, multiplexed on a shared "
+                         "clock; requests route round-robin across models)")
+    ap.add_argument("--model-split", default=None,
+                    help="'name=slots,...' per-model slot overrides for "
+                         "--archs (remaining capacity splits near-equally)")
     ap.add_argument("--reduced", action="store_true", default=True,
                     help="reduced (smoke) shapes — the default")
     ap.add_argument("--full", dest="reduced", action="store_false",
@@ -226,14 +349,26 @@ def main() -> None:
                 f"--xla_force_host_platform_device_count yourself")
         mesh = jax.make_mesh(mesh_shape, ("data", "model"))
 
-    mcfg = smoke_config(args.arch) if args.reduced else get_config(args.arch)
-    params = init_params(jax.random.PRNGKey(args.seed), mcfg)
+    archs = resolve_archs(args)
+    built = {}
+    for a in archs:
+        cfg = smoke_config(a) if args.reduced else get_config(a)
+        built[a] = (init_params(jax.random.PRNGKey(args.seed), cfg), cfg)
+    mcfg = built[archs[0]][1]
+    params = built[archs[0]][0]
     mode = {"float": "float", "abfp": "abfp_ref",
             "abfp-kernel": "abfp_kernel",
             "abfp-packed": "abfp_packed"}[args.quant]
     quant = (QuantConfig(mode=mode, tile_width=args.tile,
                          gain=args.gain, noise_lsb=0.5)
              if mode != "float" else QuantConfig(mode="float"))
+
+    if args.archs is not None:
+        if args.fault_rate is not None:
+            raise SystemExit("[serve] --archs (fleet mode) does not "
+                             "compose with fault injection flags yet")
+        serve_fleet(built, quant, mesh, args)
+        return
 
     mesh_note = (f", mesh=({mesh_shape[0]}x{mesh_shape[1]} data x model)"
                  if mesh is not None else "")

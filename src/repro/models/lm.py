@@ -360,6 +360,14 @@ def lm_head_logits(params, hidden: Array, mcfg: ModelConfig,
     return _lm_head(params, hidden, mcfg, nx.fold(999_983))
 
 
+def encode_cross_kv(params, enc_out, mcfg, nx):
+    """Public wrapper over ``_cross_kv`` for the serving path: precompute
+    the cross-attention K/V a decoder consumes from an encoder output —
+    the per-slot encoder cache ``serving.runners.EncDecRunner`` scatters
+    into the decode state at admission."""
+    return _cross_kv(params, enc_out, mcfg, nx)
+
+
 def _cross_kv(params, enc_out, mcfg, nx):
     """Precompute encoder K/V per decoder layer (whisper cross-attention)."""
     b, s, _ = enc_out.shape

@@ -1,8 +1,17 @@
 """repro.serving — arrival-driven continuous-batching engine (ABFP or
 float numerics): engine core + pluggable schedulers + SLO metrics +
 fault injection/detection/recovery + paged KV pool with preemption and
-admission backpressure."""
+admission backpressure + multi-model fleet multiplexing over per-family
+ModelRunner seams."""
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.fleet import FleetEngine  # noqa: F401
+from repro.serving.runners import (  # noqa: F401
+    DecoderRunner,
+    EncDecRunner,
+    ModelRunner,
+    RecurrentRunner,
+    runner_for,
+)
 from repro.serving.pages import (  # noqa: F401
     PagePool,
     PoolStats,

@@ -116,7 +116,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -125,8 +125,6 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.abfp import QuantConfig
 from repro.distributed.fault import StragglerMonitor, plan_recovery_mesh
-from repro.models import decode_step, init_decode_state, prefill
-from repro.models.layers import Numerics
 from repro.serving import faults as faultlib
 from repro.serving.faults import FaultConfig, FaultPlan
 from repro.serving.metrics import ServingMetrics
@@ -137,6 +135,7 @@ from repro.serving.pages import (
     plan_chunk,
     prefix_key,
 )
+from repro.serving.runners import ModelRunner, runner_for
 from repro.serving.scheduler import Scheduler, get_scheduler
 
 
@@ -149,6 +148,11 @@ class Request:
     arrival_time: Optional[float] = None    # engine clock; None = at submit
     priority: int = 0                       # larger = served first
     tenant: str = "default"                 # fairness domain for `priority`
+    model: Optional[str] = None         # fleet routing key (ServingEngine
+                                        # with models=...); None on a
+                                        # single-model engine
+    features: Optional[Any] = None      # frontend side input (enc-dec:
+                                        # (enc_len, d_model) frame embeds)
     deadline: Optional[float] = None    # absolute engine-clock time; past it
                                         # the request is cancelled (queued or
                                         # in-flight) and marked timed_out
@@ -166,8 +170,18 @@ class Request:
 
 
 class ServingEngine:
+    def __new__(cls, params=None, mcfg=None, *args, models=None, **kwargs):
+        # ``models={name: (params, mcfg[, runner])}`` turns the engine into
+        # a multi-model FLEET: one lane (single-model sub-engine) per
+        # entry, multiplexed on a shared clock (serving.fleet).
+        if models is not None and cls is ServingEngine:
+            from repro.serving.fleet import FleetEngine
+            return super().__new__(FleetEngine)
+        return super().__new__(cls)
+
     def __init__(self, params, mcfg: ModelConfig, *, capacity: int = 8,
                  max_len: int = 512,
+                 runner: Optional[ModelRunner] = None,
                  quant: QuantConfig = QuantConfig(mode="float"),
                  seed: int = 0,
                  prefill_chunks: Sequence[int] = (16, 64, 128),
@@ -189,6 +203,7 @@ class ServingEngine:
                  degraded_max_new: Optional[int] = None,
                  tenant_quota: Optional[int] = None):
         self.mesh = mesh
+        self.runner = runner if runner is not None else runner_for(mcfg)
         if quant.mode == "abfp_packed":
             # Quantize-once: pack every dense weight at admission time so
             # the per-tick decode path only streams int8 codes + bf16
@@ -218,10 +233,11 @@ class ServingEngine:
         self.page_size = 0
         self.max_pages = 0
         if self.paged:
-            if mcfg.attention_type != "full":
+            if not self.runner.paged_ok:
                 raise ValueError(
                     "paged serving needs append-only full-attention KV "
-                    f"caches; got attention_type={mcfg.attention_type!r}")
+                    f"caches; got attention_type={mcfg.attention_type!r} "
+                    f"({type(self.runner).__name__})")
             # ABFP tile width is the natural page quantum: the paper's
             # fixed-size analog tiles align with the int8 cache blocks.
             self.page_size = int(page_size) if page_size else (
@@ -237,7 +253,9 @@ class ServingEngine:
             self._slot_len = [0] * capacity     # tokens appended per slot
             self._slot_keys: List[List[int]] = [[] for _ in range(capacity)]
             self._slot_cap: List[Optional[int]] = [None] * capacity
-        self.prefix_enabled = self.paged and bool(prefix_cache) and self.chunked
+        self.prefix_enabled = (self.paged and bool(prefix_cache)
+                               and self.chunked
+                               and self.runner.prefix_cache_ok)
         self.preemption = self.paged if preemption is None else bool(preemption)
         self.queue_watermark = queue_watermark
         hi, lo = page_watermarks
@@ -247,8 +265,8 @@ class ServingEngine:
         self.tenant_quota = tenant_quota
         self._degraded = False
 
-        self.state = init_decode_state(
-            mcfg, capacity, max_len,
+        self.state = self.runner.init_state(
+            capacity, max_len,
             page_size=self.page_size if self.paged else None,
             pool_pages=self.pool.num_pages if self.paged else None)
         if mesh is not None:
@@ -256,8 +274,7 @@ class ServingEngine:
             # row); everything stays replicated over 'model' so the
             # column-parallel matmul dispatch keeps results bit-identical
             # to single-device at any mesh shape.
-            from repro.distributed.sharding import shard_decode_state
-            self.state = shard_decode_state(self.state, mesh)
+            self.state = self.runner.shard_state(self.state, mesh)
         self.slots: List[Optional[Request]] = [None] * capacity
         self._next_input = np.zeros((capacity,), np.int32)
         self.ticks = 0
@@ -303,78 +320,25 @@ class ServingEngine:
 
     def _build_jitted(self):
         """(Re)build the jitted step/prefill/reset closures for the current
-        mesh — called at init and again after a shard-drop re-shard."""
-        mcfg, quant, mesh = self.mcfg, self.quant, self.mesh
-
-        def _step(params, state, token, key):
-            nx = Numerics(quant, key, mesh=mesh)
-            return decode_step(params, state, token, mcfg, nx)
-
-        self._jit_step = jax.jit(_step, donate_argnums=(1,))
-
-        def _prefill(params, state, tokens, n_tokens, key):
-            nx = Numerics(quant, key, mesh=mesh)
-            return prefill(params, state, tokens, n_tokens, mcfg, nx)
-
+        mesh — called at init and again after a shard-drop re-shard.  The
+        closures themselves come from the runner (the model-family seam);
+        the engine owns only jit + donation policy."""
+        r = self.runner
+        self._jit_step = jax.jit(r.make_step(self.quant, self.mesh),
+                                 donate_argnums=(1,))
         # One compile per chunk bucket (shape-specialized), nothing more.
-        self._jit_prefill = jax.jit(_prefill, donate_argnums=(1,))
-
-        def _names(path):
-            return [str(getattr(k, "key", getattr(k, "idx", k)))
-                    for k in path]
-
-        def _reset(state, i):
-            def reset(path, leaf):
-                names = _names(path)
-                if names[-1].endswith("_pages") or names[-1] == "page_table":
-                    # Pool pages are GLOBAL (other slots own them); the
-                    # page table is host-owned and refreshed every pass.
-                    return leaf
-                b_axis = 1 if "groups" in names else 0
-                if leaf.ndim <= b_axis:
-                    return leaf
-                idx = (slice(None),) * b_axis + (i,)
-                fill = (-1e30 if names[-1] == "m" and leaf.ndim - b_axis == 3
-                        else 0)
-                return leaf.at[idx].set(jnp.asarray(fill, leaf.dtype))
-
-            return jax.tree_util.tree_map_with_path(reset, state)
-
+        self._jit_prefill = jax.jit(r.make_prefill(self.quant, self.mesh),
+                                    donate_argnums=(1,))
         # Compile-once slot reset: the slot index is data, so admission
         # under churn costs one fused scatter pass instead of a host-side
         # state rebuild that scales with model size.
-        self._jit_reset = jax.jit(_reset, donate_argnums=(0,))
-
-        def _attach(state, i, length):
-            # Prefix-cache attach: slot i starts mid-sequence — its cache
-            # length and rope position jump to the shared-prefix length.
-            def setl(path, leaf):
-                names = _names(path)
-                if names[-1] not in ("position", "length"):
-                    return leaf
-                b_axis = 1 if "groups" in names else 0
-                idx = (slice(None),) * b_axis + (i,)
-                return leaf.at[idx].set(jnp.asarray(length, leaf.dtype))
-
-            return jax.tree_util.tree_map_with_path(setl, state)
-
-        self._jit_attach = jax.jit(_attach, donate_argnums=(0,))
-
-        def _copy_page(state, src, dst):
-            # Copy-on-write: duplicate one physical page across every
-            # layer's pool (src/dst are data, so one compile serves all
-            # CoW splits).
-            def cp(path, leaf):
-                names = _names(path)
-                if not names[-1].endswith("_pages"):
-                    return leaf
-                if "groups" in names:
-                    return leaf.at[:, dst].set(leaf[:, src])
-                return leaf.at[dst].set(leaf[src])
-
-            return jax.tree_util.tree_map_with_path(cp, state)
-
-        self._jit_copy_page = jax.jit(_copy_page, donate_argnums=(0,))
+        self._jit_reset = jax.jit(r.make_reset(), donate_argnums=(0,))
+        self._jit_attach = jax.jit(r.make_attach(), donate_argnums=(0,))
+        self._jit_copy_page = jax.jit(r.make_copy_page(), donate_argnums=(0,))
+        self._jit_admit = None
+        if r.needs_admission:
+            self._jit_admit = jax.jit(r.make_admit(self.quant, self.mesh),
+                                      donate_argnums=(1,))
 
     # -- clock ----------------------------------------------------------------
     def _tick_clock(self):
@@ -411,8 +375,10 @@ class ServingEngine:
             return False
         total = len(req.prompt) + max(1, req.max_new_tokens)
         if not self.paged:
-            return total <= self.max_len
-        need = pages_needed(total, self.page_size)
+            # Fixed-state runners (recurrent families) hold O(1) decode
+            # state per slot — sequence length never hits a cache bound.
+            return self.runner.fixed_state or total <= self.max_len
+        need = self.runner.capacity_cost(total, self.page_size)
         return need <= self.max_pages and need <= self.pool.num_pages
 
     def _should_shed(self, req: Request, at: float) -> bool:
@@ -445,7 +411,7 @@ class ServingEngine:
         request is SHED instead of queued (``req.shed`` with a
         ``req.retry_after`` hint, surfaced through the next ``poll()``).
         Returns False for both."""
-        if not self.fits(req):
+        if not self.fits(req) or not self.runner.accepts(req):
             req.done = True
             self.metrics.on_reject(req.uid)
             return False
@@ -497,6 +463,16 @@ class ServingEngine:
                     if self._degraded and self.degraded_max_new is not None:
                         self._slot_cap[i] = max(self.degraded_max_new,
                                                 len(req.generated) + 1)
+                if self._jit_admit is not None:
+                    # Runner admission hook (enc-dec: one encoder pass whose
+                    # cross-attention KV is cached in this slot for the whole
+                    # request).  Keyed off the request uid so a preemption
+                    # replay re-encodes to bit-identical features.
+                    akey = jax.random.fold_in(
+                        jax.random.PRNGKey(self.seed), req.uid)
+                    self.state = self._jit_admit(
+                        self.params, self.state,
+                        jnp.asarray(req.features), jnp.int32(i), akey)
                 toks = self._feed(req)
                 if self.chunked:
                     req.prompt_pos = 0      # consumed by prefill passes
@@ -535,11 +511,12 @@ class ServingEngine:
         if not live and self.pool.tenant_held(req.tenant) == 0:
             return True
         charged = sum(
-            pages_needed(len(r.prompt) + max(1, r.max_new_tokens),
-                         self.page_size) for r in live)
+            self.runner.capacity_cost(
+                len(r.prompt) + max(1, r.max_new_tokens), self.page_size)
+            for r in live)
         remaining = max(1, req.max_new_tokens - len(req.generated))
-        need = pages_needed(len(self._feed(req)) + remaining,
-                            self.page_size)
+        need = self.runner.capacity_cost(
+            len(self._feed(req)) + remaining, self.page_size)
         return charged + need <= self.tenant_quota
 
     def _admit_arrived(self) -> List[Request]:
@@ -909,10 +886,7 @@ class ServingEngine:
         import numpy as onp
         from jax.sharding import Mesh
 
-        from repro.distributed.sharding import (
-            shard_decode_state,
-            shard_serving_params,
-        )
+        from repro.distributed.sharding import shard_serving_params
 
         self._lost_shard = None
         if self.mesh is not None and self.mesh.devices.size > 1:
@@ -929,16 +903,16 @@ class ServingEngine:
                 self._params_clean, self.mesh, self.quant)
             self._params_clean = self.params
             self._build_jitted()        # closures bind the new mesh
-            self.state = init_decode_state(
-                self.mcfg, self.capacity, self.max_len,
+            self.state = self.runner.init_state(
+                self.capacity, self.max_len,
                 page_size=self.page_size if self.paged else None,
                 pool_pages=self.pool.num_pages if self.paged else None)
-            self.state = shard_decode_state(self.state, self.mesh)
+            self.state = self.runner.shard_state(self.state, self.mesh)
         else:
             # Single-array engine: re-program the array from the spare.
             self.params = self._params_clean
-            self.state = init_decode_state(
-                self.mcfg, self.capacity, self.max_len,
+            self.state = self.runner.init_state(
+                self.capacity, self.max_len,
                 page_size=self.page_size if self.paged else None,
                 pool_pages=self.pool.num_pages if self.paged else None)
         if self.paged:

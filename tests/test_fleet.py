@@ -1,0 +1,196 @@
+"""Heterogeneous fleet serving tests (``make test-fleet``).
+
+Covers the ModelRunner seam end to end: recurrent archs served open-loop
+through submit/poll/drain, chunked-prefill bit-identity through the
+engine for fixed-state models, the never-preempt guarantee for recurrent
+lanes under page-pool pressure, and per-model request conservation on a
+three-family multiplexed fleet (decoder-ish enc-dec + two recurrent).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import frontends, init_params
+from repro.serving import FleetEngine, Request, ServingEngine
+from repro.serving.runners import runner_for
+
+pytestmark = pytest.mark.fleet
+
+ARCHS = ("smollm-360m", "whisper-base", "xlstm-350m", "recurrentgemma-2b")
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    out = {}
+    for a in ARCHS:
+        mcfg = smoke_config(a)
+        out[a] = (init_params(jax.random.PRNGKey(0), mcfg), mcfg)
+    return out
+
+
+def _feats(mcfg, runner, seed):
+    return np.asarray(frontends.audio_stub_features(
+        jax.random.PRNGKey(seed), 1, runner.enc_len, mcfg.d_model)[0],
+        np.float32)
+
+
+def _reqs(mcfg, n, *, prompt_len=4, max_new=4, model=None, features=None,
+          uid0=0, arrivals=None):
+    rng = np.random.default_rng(uid0 + 1)
+    return [Request(
+        uid=uid0 + i,
+        prompt=rng.integers(1, mcfg.vocab_size, prompt_len).tolist(),
+        max_new_tokens=max_new, model=model, features=features,
+        arrival_time=None if arrivals is None else float(arrivals[i]))
+        for i in range(n)]
+
+
+# -- recurrent archs through the open-loop engine ----------------------------
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "recurrentgemma-2b"])
+def test_recurrent_open_loop_submit_poll_drain(zoo, arch):
+    params, mcfg = zoo[arch]
+    eng = ServingEngine(params, mcfg, capacity=2, max_len=32)
+    reqs = _reqs(mcfg, 5, arrivals=[0, 0, 1, 3, 6])
+    for r in reqs:
+        assert eng.submit(r)
+    done = eng.drain()
+    assert len(done) == 5
+    assert all(len(r.generated) == 4 for r in done)
+    assert eng.metrics.conservation()["ok"]
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "recurrentgemma-2b"])
+def test_recurrent_chunked_prefill_matches_token_by_token(zoo, arch):
+    """Float mode: bucketed chunked prefill through the engine must emit
+    bit-identical greedy tokens to the legacy one-prompt-token-per-tick
+    path (recurrent folds + ring caches advance identically)."""
+    params, mcfg = zoo[arch]
+
+    def serve(chunked):
+        eng = ServingEngine(params, mcfg, capacity=2, max_len=32, seed=0,
+                            chunked=chunked, prefill_chunks=(4, 8))
+        # Prompt lengths straddle the (4, 8) buckets, incl. an exact hit.
+        reqs = [Request(uid=i, prompt=list(range(2, 2 + n)),
+                        max_new_tokens=4)
+                for i, n in enumerate((3, 4, 9))]
+        eng.run(reqs)
+        return [r.generated for r in reqs]
+
+    assert serve(chunked=True) == serve(chunked=False)
+
+
+def test_recurrent_admissible_at_any_length(zoo):
+    """Fixed-state slots have no max_len-bound KV: a request whose
+    prompt + max_new exceeds max_len is still admissible."""
+    params, mcfg = zoo["xlstm-350m"]
+    eng = ServingEngine(params, mcfg, capacity=1, max_len=16)
+    long_req = Request(uid=0, prompt=list(range(1, 25)), max_new_tokens=8)
+    assert eng.fits(long_req)
+    assert eng.submit(long_req)
+    eng.drain()
+    assert len(long_req.generated) == 8
+
+
+# -- fleet construction / routing --------------------------------------------
+
+def test_models_kwarg_builds_fleet(zoo):
+    eng = ServingEngine(models={"a": zoo["smollm-360m"],
+                                "b": zoo["xlstm-350m"]}, capacity=4)
+    assert isinstance(eng, FleetEngine)
+    assert {n: l.capacity for n, l in eng.lanes.items()} == {"a": 2, "b": 2}
+
+
+def test_model_split_overrides(zoo):
+    eng = ServingEngine(models={"a": zoo["smollm-360m"],
+                                "b": zoo["xlstm-350m"]},
+                        capacity=6, model_split={"a": 4})
+    assert eng.lanes["a"].capacity == 4
+    assert eng.lanes["b"].capacity == 2
+    with pytest.raises(KeyError):
+        ServingEngine(models={"a": zoo["smollm-360m"]},
+                      capacity=2, model_split={"zzz": 1})
+
+
+def test_routing_unknown_model_raises(zoo):
+    eng = ServingEngine(models={"a": zoo["smollm-360m"],
+                                "b": zoo["xlstm-350m"]}, capacity=4)
+    with pytest.raises(KeyError, match="unknown model"):
+        eng.submit(Request(uid=0, prompt=[1], max_new_tokens=1,
+                           model="zzz"))
+    with pytest.raises(KeyError, match="no model routing key"):
+        eng.submit(Request(uid=1, prompt=[1], max_new_tokens=1))
+
+
+def test_single_lane_fleet_defaults_routing(zoo):
+    eng = ServingEngine(models={"only": zoo["smollm-360m"]}, capacity=2)
+    req = Request(uid=0, prompt=[1, 2], max_new_tokens=2)
+    assert eng.submit(req)
+    eng.drain()
+    assert len(req.generated) == 2
+
+
+# -- recurrent lanes never preempt under pool pressure ------------------------
+
+def test_fixed_state_lane_never_preempted(zoo):
+    """A paged fleet puts ONLY pageable lanes on the pool: the recurrent
+    lane runs unpaged (no pool, no preemption machinery at all), so pool
+    pressure on the decoder lane can never evict recurrent slots."""
+    eng = ServingEngine(
+        models={"dec": zoo["smollm-360m"], "rec": zoo["xlstm-350m"]},
+        capacity=6, model_split={"dec": 4}, max_len=32,
+        paged=True, page_size=8, pool_pages=6)
+    # Structural guarantees first: pool exists only for the decoder lane.
+    assert eng.lanes["dec"].paged and eng.lanes["dec"].pool is not None
+    assert not eng.lanes["rec"].paged and eng.lanes["rec"].pool is None
+    assert not eng.lanes["rec"].preemption
+
+    # 4 decoder slots x 16-token requests (2 pages each) against a 6-page
+    # pool: growth must preempt.  The recurrent lane serves concurrently.
+    mcfg_d = zoo["smollm-360m"][1]
+    mcfg_r = zoo["xlstm-350m"][1]
+    reqs = (_reqs(mcfg_d, 8, prompt_len=8, max_new=8, model="dec",
+                  arrivals=[0] * 8)
+            + _reqs(mcfg_r, 4, prompt_len=8, max_new=8, model="rec",
+                    uid0=100, arrivals=[0] * 4))
+    for r in reqs:
+        eng.submit(r)
+    done = eng.drain()
+    cons = eng.conservation()
+    assert cons["dec"]["ok"] and cons["dec"]["preempt_ok"]
+    assert cons["rec"]["ok"]
+    assert cons["dec"]["preempted"] > 0      # pressure was real
+    assert cons["rec"]["preempted"] == 0     # fixed state: never evicted
+    assert len(done) == len(reqs)
+    assert all(len(r.generated) == 8 for r in reqs if r.model == "rec")
+
+
+# -- three-family multiplexed fleet ------------------------------------------
+
+def test_three_model_fleet_conservation(zoo):
+    names = ("whisper-base", "xlstm-350m", "recurrentgemma-2b")
+    runners = {n: runner_for(zoo[n][1]) for n in names}
+    eng = ServingEngine(models={n: zoo[n] for n in names}, capacity=6,
+                        max_len=32)
+    reqs = []
+    for i in range(9):
+        name = names[i % 3]
+        feats = (_feats(zoo[name][1], runners[name], i)
+                 if runners[name].needs_admission else None)
+        reqs += _reqs(zoo[name][1], 1, model=name, features=feats, uid0=i,
+                      arrivals=[i * 0.5])
+    for r in reqs:
+        assert eng.submit(r)
+    done = eng.drain()
+    assert len(done) == 9
+    cons = eng.conservation()
+    for n in names:
+        assert cons[n]["submitted"] == 3, (n, cons[n])
+        assert cons[n]["completed"] == 3, (n, cons[n])
+        assert cons[n]["ok"], (n, cons[n])
+    assert eng.ticks == sum(l.ticks for l in eng.lanes.values())
+    # Per-model metrics are isolated: each lane saw only its own requests.
+    summ = eng.summary()
+    assert all(summ[n]["requests"]["finished"] == 3 for n in names)

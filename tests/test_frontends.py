@@ -1,0 +1,120 @@
+"""Frontend stub tests (models/frontends.py) + EncDec admission.
+
+The stubs stand in for real audio/vision towers: deterministic per key,
+fixed shape/dtype, finite.  The EncDec admission test closes the loop —
+stub features submitted with a request must flow through the runner's
+admission encoder pass and produce a completed request whose decode saw
+the cached cross-attention KV (different audio => different tokens).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import frontends, init_params
+from repro.serving import Request, ServingEngine
+from repro.serving.runners import runner_for
+
+pytestmark = pytest.mark.fleet
+
+
+# -- stub shape / dtype / determinism ----------------------------------------
+
+def test_audio_stub_shape_and_dtype():
+    out = frontends.audio_stub_features(jax.random.PRNGKey(0), 2, 16, 64)
+    assert out.shape == (2, 16, 64)
+    assert out.dtype == jnp.bfloat16
+    out32 = frontends.audio_stub_features(jax.random.PRNGKey(0), 1, 8, 32,
+                                          dtype=jnp.float32)
+    assert out32.dtype == jnp.float32
+    assert np.isfinite(np.asarray(out32, np.float32)).all()
+
+
+def test_vision_stub_shape_and_dtype():
+    out = frontends.vision_stub_embeddings(jax.random.PRNGKey(0), 2, 16, 64)
+    assert out.shape == (2, 16, 64)
+    assert out.dtype == jnp.bfloat16
+
+
+def test_stubs_deterministic_per_key():
+    a = frontends.audio_stub_features(jax.random.PRNGKey(7), 1, 8, 32)
+    b = frontends.audio_stub_features(jax.random.PRNGKey(7), 1, 8, 32)
+    c = frontends.audio_stub_features(jax.random.PRNGKey(8), 1, 8, 32)
+    assert np.array_equal(np.asarray(a, np.float32),
+                          np.asarray(b, np.float32))
+    assert not np.array_equal(np.asarray(a, np.float32),
+                              np.asarray(c, np.float32))
+
+
+# -- EncDec admission consumes the stubs --------------------------------------
+
+@pytest.fixture(scope="module")
+def whisper():
+    mcfg = smoke_config("whisper-base")
+    params = init_params(jax.random.PRNGKey(0), mcfg)
+    return params, mcfg
+
+
+def _feats(mcfg, runner, seed):
+    return np.asarray(frontends.audio_stub_features(
+        jax.random.PRNGKey(seed), 1, runner.enc_len, mcfg.d_model)[0],
+        np.float32)
+
+
+def test_whisper_request_completes_via_submit_poll_drain(whisper):
+    params, mcfg = whisper
+    runner = runner_for(mcfg)
+    eng = ServingEngine(params, mcfg, capacity=2, max_len=32)
+    reqs = [Request(uid=i, prompt=[1, 2, 3 + i], max_new_tokens=4,
+                    features=_feats(mcfg, runner, 5))
+            for i in range(3)]
+    for r in reqs:
+        assert eng.submit(r)
+    done = eng.drain()
+    assert len(done) == 3
+    assert all(len(r.generated) == 4 for r in done)
+    assert eng.metrics.conservation()["ok"]
+
+
+def test_whisper_rejects_missing_or_misshapen_features(whisper):
+    params, mcfg = whisper
+    runner = runner_for(mcfg)
+    eng = ServingEngine(params, mcfg, capacity=1, max_len=32)
+    no_feats = Request(uid=0, prompt=[1, 2], max_new_tokens=2)
+    assert not eng.submit(no_feats)
+    assert no_feats.done
+    bad = Request(uid=1, prompt=[1, 2], max_new_tokens=2,
+                  features=np.zeros((runner.enc_len + 3, mcfg.d_model),
+                                    np.float32))
+    assert not eng.submit(bad)
+    assert bad.done
+
+
+def test_whisper_decode_conditions_on_audio(whisper):
+    """Same prompt, different audio => the cached cross-attention KV must
+    change the decode logits (argmax may coincide on untrained weights,
+    so compare the logit vectors, and greedy tokens for determinism)."""
+    import jax.numpy as jnp
+
+    from repro.core.abfp import QuantConfig
+
+    params, mcfg = whisper
+    runner = runner_for(mcfg)
+    quant = QuantConfig(mode="float")
+    step = jax.jit(runner.make_step(quant, None))
+    admit = jax.jit(runner.make_admit(quant, None))
+
+    def logits_for(feat_seed):
+        state = runner.init_state(1, 8)
+        state = admit(params, state, jnp.asarray(_feats(mcfg, runner,
+                                                        feat_seed)),
+                      jnp.int32(0), jax.random.PRNGKey(0))
+        logits, _ = step(params, state, jnp.asarray([5], jnp.int32),
+                         jax.random.PRNGKey(1))
+        return np.asarray(logits, np.float32)
+
+    base, same, other = (logits_for(11), logits_for(11), logits_for(12))
+    assert np.array_equal(base, same)            # deterministic per audio
+    assert not np.array_equal(base, other)       # audio reaches decode

@@ -1,0 +1,118 @@
+"""ModelRunner seam tests.
+
+``runner_for`` must map every config family to the right runner class,
+runner capacity accounting must match the engine's page math (attention
+KV pages vs O(1) recurrent state), and — the registry smoke gate — every
+registered arch must build at smoke shapes and take one jitted
+decode_step through its runner's closures.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import list_archs, smoke_config
+from repro.core.abfp import QuantConfig
+from repro.models import frontends, init_params
+from repro.serving.pages import pages_needed
+from repro.serving.runners import (
+    DecoderRunner,
+    EncDecRunner,
+    ModelRunner,
+    RecurrentRunner,
+    runner_for,
+)
+
+pytestmark = pytest.mark.fleet
+
+FLOAT = QuantConfig(mode="float")
+
+
+# -- family -> runner mapping -------------------------------------------------
+
+def test_runner_for_mapping():
+    expected = {
+        "smollm-360m": DecoderRunner,
+        "tinyllama-1.1b": DecoderRunner,
+        "gemma-7b": DecoderRunner,
+        "whisper-base": EncDecRunner,
+        "xlstm-350m": RecurrentRunner,
+        "recurrentgemma-2b": RecurrentRunner,
+    }
+    for arch, cls in expected.items():
+        r = runner_for(smoke_config(arch))
+        assert type(r) is cls, (arch, type(r).__name__)
+
+
+def test_every_registered_arch_has_a_runner():
+    for arch in list_archs():
+        r = runner_for(smoke_config(arch))
+        assert isinstance(r, ModelRunner)
+
+
+# -- capacity accounting ------------------------------------------------------
+
+def test_decoder_capacity_cost_is_pages():
+    r = runner_for(smoke_config("smollm-360m"))
+    assert r.capacity_cost(33, 16) == pages_needed(33, 16) == 3
+    assert r.capacity_cost(16, 16) == 1
+
+
+def test_recurrent_capacity_cost_is_zero():
+    r = runner_for(smoke_config("xlstm-350m"))
+    assert r.fixed_state
+    assert r.capacity_cost(10, 16) == 0
+    assert r.capacity_cost(100_000, 16) == 0
+
+
+def test_paged_ok_by_family():
+    assert runner_for(smoke_config("smollm-360m")).paged_ok
+    assert runner_for(smoke_config("whisper-base")).paged_ok
+    assert not runner_for(smoke_config("xlstm-350m")).paged_ok
+    assert not runner_for(smoke_config("recurrentgemma-2b")).paged_ok
+
+
+def test_encdec_accepts_requires_features():
+    mcfg = smoke_config("whisper-base")
+    r = runner_for(mcfg)
+
+    class Req:
+        features = None
+
+    req = Req()
+    assert not r.accepts(req)
+    req.features = np.zeros((r.enc_len, mcfg.d_model), np.float32)
+    assert r.accepts(req)
+    req.features = np.zeros((r.enc_len + 1, mcfg.d_model), np.float32)
+    assert not r.accepts(req)
+
+
+def test_decoder_accepts_anything():
+    r = runner_for(smoke_config("smollm-360m"))
+
+    class Req:
+        features = None
+
+    assert r.accepts(Req())
+
+
+# -- registry smoke: every arch builds and takes one decode step --------------
+
+@pytest.mark.parametrize("arch", sorted(list_archs()))
+def test_arch_builds_and_decodes_one_step(arch):
+    mcfg = smoke_config(arch)
+    runner = runner_for(mcfg)
+    params = init_params(jax.random.PRNGKey(0), mcfg)
+    state = runner.init_state(2, 16)
+    if runner.needs_admission:
+        feats = frontends.audio_stub_features(
+            jax.random.PRNGKey(1), 1, runner.enc_len, mcfg.d_model)[0]
+        state = runner.make_admit(FLOAT, None)(
+            params, state, feats, jnp.int32(0), jax.random.PRNGKey(2))
+    step = jax.jit(runner.make_step(FLOAT, None))
+    token = jnp.ones((2,), jnp.int32)
+    logits, state = step(params, state, token, jax.random.PRNGKey(3))
+    logits = np.asarray(logits, np.float32)
+    assert logits.shape == (2, mcfg.vocab_size)
+    assert np.isfinite(logits).all(), arch
