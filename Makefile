@@ -16,7 +16,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: lint test-fast test test-slow test-dist test-faults test-overload test-fleet bench bench-smoke bench-serving bench-faults bench-overload bench-fleet
+.PHONY: lint check-links test-fast test test-slow test-dist test-faults test-overload test-fleet bench bench-smoke bench-serving bench-faults bench-overload bench-fleet
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \
@@ -24,6 +24,11 @@ lint:
 	else \
 		echo "[lint] ruff not installed; skipping (CI installs it via requirements-ci.txt)"; \
 	fi
+
+# Markdown link check: every relative link in README.md + docs/ must
+# resolve in the working tree (stdlib-only, no network; the CI docs job).
+check-links:
+	$(PY) tools/check_links.py
 
 # Tier-1 fast lane: everything except the @pytest.mark.slow end-to-end runs,
 # plus the serving smoke benchmark (asserts chunked prefill is not slower

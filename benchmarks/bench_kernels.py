@@ -1,6 +1,7 @@
 """Kernel-path benchmark: fused Pallas ABFP matmul vs the einsum oracle and
-the scan path, packed (quantize-once) vs unpacked weights, and decode-shape
-(m=1 / m=8) rows.
+the scan path, packed (quantize-once) vs unpacked weights, decode-shape
+(m=1 / m=8) rows, the fused QKV decode kernel vs three separate packed
+launches, and an adaptive per-tile gain accuracy sweep.
 
 On this CPU container the Pallas kernels run in interpret mode, so absolute
 times are NOT TPU-indicative; the benchmark's value here is (a) correctness
@@ -11,8 +12,9 @@ per-step max/round/clip work — and (c) the relative packed-vs-unpacked
 wall-clock at decode shapes, where weight-side work dominates.
 
 Emits ``name,us_per_call,derived`` CSV rows (the benchmarks/run.py
-contract) AND a machine-readable JSON file (``bench_kernels.json`` next to
-this script, override with REPRO_BENCH_JSON=path).
+contract) AND a machine-readable JSON file (``BENCH_kernels.json`` at the
+repo root, schema_version 2 — see docs/BENCHMARKS.md; override with
+REPRO_BENCH_JSON=path).
 """
 
 import json
@@ -24,17 +26,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.abfp import QuantConfig, abfp_matmul, pack_abfp_weight
+from repro.kernels.abfp_decode_fused import fused_qkv_packed_pallas
 from repro.kernels.abfp_matmul import abfp_matmul_packed_pallas, abfp_matmul_pallas
 from repro.kernels.ref import abfp_matmul_ref
+
+SCHEMA_VERSION = 2
 
 # Prefill-ish shapes (oracle + scan cross-check) and decode shapes (m=1/8).
 SHAPES = [(256, 2048, 256), (128, 4096, 512)]
 DECODE_SHAPES = [(1, 2048, 2048), (8, 2048, 2048)]
+# Fused QKV decode shapes: (m, K, (Nq, Nk, Nv)) — a GQA projection block.
+FUSED_SHAPES = [(1, 2048, (2048, 256, 256)), (8, 2048, (2048, 256, 256))]
+GAIN_SWEEP = (1.0, 2.0, 4.0, 8.0, 16.0)
 
 _JSON_PATH = os.environ.get(
     "REPRO_BENCH_JSON",
-    os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                 "bench_kernels.json"))
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "BENCH_kernels.json"))
 
 
 def _time(fn, *args, reps=3):
@@ -156,9 +164,73 @@ def run(csv_rows: list) -> dict:
                 **hbm,
             }
 
+    # Fused QKV decode step: one launch over the concatenated Q/K/V column
+    # space vs three stand-alone packed launches.  One grid amortizes the
+    # activation stream (x is read once per K-block instead of three times)
+    # and drops two kernel dispatches per decode tick.
+    for (m, k, cols) in FUSED_SHAPES:
+        tile = 32
+        cfg = QuantConfig(mode="abfp_packed", tile_width=tile, gain=8.0,
+                          noise_lsb=0.0, out_dtype=jnp.bfloat16)
+        kx, kw = jax.random.split(jax.random.PRNGKey(2))
+        x = (jax.random.normal(kx, (m, k)) * 0.5).astype(jnp.bfloat16)
+        pws = tuple(
+            pack_abfp_weight(
+                (jax.random.laplace(jax.random.fold_in(kw, i), (k, n))
+                 * 0.05).astype(jnp.bfloat16), cfg)
+            for i, n in enumerate(cols))
+
+        def three_fn(x, pws=pws):
+            return tuple(abfp_matmul_packed_pallas(x, pw, cfg) for pw in pws)
+
+        def fused_fn(x, pws=pws):
+            return fused_qkv_packed_pallas(x, pws, cfg)
+
+        y3, t3 = _time(jax.jit(three_fn), x)
+        yf, tf = _time(jax.jit(fused_fn), x)
+        for a, b in zip(y3, yf):    # the tentpole gate: bit-identical
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+        name = f"fused_qkv_m{m}_k{k}_n{'+'.join(map(str, cols))}_t{tile}"
+        csv_rows.append(f"{name}_three_calls,{t3*1e6:.0f},launches=3")
+        csv_rows.append(f"{name}_fused,{tf*1e6:.0f},"
+                        f"launches=1;speedup={t3/tf:.2f}")
+        results[name] = {
+            "m": m, "k": k, "cols": list(cols), "tile": tile,
+            "three_calls_s": t3, "fused_s": tf,
+            "fused_speedup_vs_three_calls": t3 / tf,
+        }
+
+    # Adaptive per-tile gain sweep: error vs the FLOAT32 oracle as the gain
+    # cap rises.  The conservative pow2 per-tile choice must never increase
+    # error (the paper's amplification claim); the sweep lands in the JSON.
+    gain_rows = []
+    kx, kw = jax.random.split(jax.random.PRNGKey(3))
+    gx = jax.random.normal(kx, (16, 768), jnp.float32)
+    gw = jax.random.laplace(kw, (768, 256), jnp.float32) * 0.04
+    g_ref = np.asarray(gx @ gw)
+    for tile in (32, 128):
+        errs = []
+        for cap in GAIN_SWEEP:
+            cfg = QuantConfig(mode="abfp_fused", tile_width=tile, gain=cap,
+                              noise_lsb=0.0, out_dtype=jnp.float32)
+            pw = pack_abfp_weight(gw, cfg, adaptive_gain=True)
+            y = np.asarray(abfp_matmul_packed_pallas(gx, pw, cfg))
+            err = float(np.mean(np.abs(y - g_ref)))
+            errs.append(err)
+            gain_rows.append({"tile": tile, "gain_cap": cap,
+                              "mean_abs_err": err})
+            csv_rows.append(f"gain_sweep_t{tile}_g{int(cap)},0,"
+                            f"mean_abs_err={err:.5f}")
+        assert all(b <= a * (1 + 1e-6) for a, b in zip(errs, errs[1:])), errs
+    results["gain_sweep"] = gain_rows
+
     try:
         with open(_JSON_PATH, "w") as f:
-            json.dump({"bench": "bench_kernels", "backend": jax.default_backend(),
+            json.dump({"schema_version": SCHEMA_VERSION,
+                       "benchmark": "kernels",
+                       "backend": jax.default_backend(),
                        "results": results}, f, indent=2, sort_keys=True)
         csv_rows.append(f"bench_kernels_json,0,path={_JSON_PATH}")
     except OSError as e:  # read-only checkout: CSV rows still carry the data
@@ -176,3 +248,7 @@ if __name__ == "__main__":
               f"unpacked, weight bytes {r['w_bf16_bytes']} -> "
               f"{r['w_packed_bytes']} "
               f"({r['packed_vs_bf16_weight_ratio']:.2f}x smaller)")
+    for name, r in out.items():
+        if name.startswith("fused_qkv"):
+            print(f"{name}: fused "
+                  f"{r['fused_speedup_vs_three_calls']:.2f}x vs three calls")

@@ -123,6 +123,39 @@ def markdown_table(rows) -> str:
     return "\n".join(lines)
 
 
+def fused_decode_rows() -> list:
+    """Analytic fused-decode cells: one fused QKV launch vs three packed
+    launches at decode shapes (m=1 / m=8).
+
+    At decode the QKV projections are memory-bound (useful ratio near the
+    weight-byte floor), so the win is pure HBM traffic: the fused grid
+    streams the activation row once per K-block instead of once per weight,
+    and adds only the (T, nj) f32 gains table.  Representative GQA block:
+    K=2048, N = 2048 + 256 + 256, tile 32 (kernels/abfp_decode_fused.py;
+    measured wall-clock lives in BENCH_kernels.json ``fused_qkv_*`` rows).
+    """
+    k, cols, tile = 2048, (2048, 256, 256), 32
+    t_tiles = -(-k // tile)
+    rows = []
+    for m in (1, 8):
+        n_tot = sum(cols)
+        w_bytes = k * n_tot * 1 + t_tiles * n_tot * 2     # int8 codes + bf16
+        gains_bytes = t_tiles * (n_tot // 128) * 4        # f32 (T, nj) table
+        out_bytes = m * n_tot * 2
+        x_bytes = m * k * 4
+        three = 3 * x_bytes + w_bytes + out_bytes
+        fused = x_bytes + w_bytes + gains_bytes + out_bytes
+        rows.append({
+            "kind": "fused_decode", "m": m, "k": k, "cols": list(cols),
+            "tile": tile,
+            "three_call_bytes": three, "fused_bytes": fused,
+            "three_call_memory_s": three / HBM_BW,
+            "fused_memory_s": fused / HBM_BW,
+            "traffic_speedup": three / fused,
+        })
+    return rows
+
+
 def run(csv_rows: list) -> dict:
     paths = sorted(glob.glob(os.path.join(ART_DIR, "*.json")))
     rows = []
@@ -137,12 +170,25 @@ def run(csv_rows: list) -> dict:
             f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}_{r['quant']},0,"
             f"dom={r['dominant'].replace('_s','')}"
             f";frac={r['roofline_fraction']:.3f}")
+    fused = fused_decode_rows()
+    for r in fused:
+        csv_rows.append(
+            f"roofline_fused_decode_m{r['m']},0,"
+            f"traffic_speedup={r['traffic_speedup']:.2f}"
+            f";fused_memory_s={r['fused_memory_s']:.2e}")
     md = markdown_table(rows)
+    md += ("\n\n### Fused decode step (abfp_fused)\n\n"
+           "| m | three-call bytes | fused bytes | traffic speedup |\n"
+           "|---|---|---|---|\n")
+    for r in fused:
+        md += (f"| {r['m']} | {r['three_call_bytes']} | {r['fused_bytes']} "
+               f"| {r['traffic_speedup']:.2f}x |\n")
     out_path = os.path.join(ART_DIR, "..", "roofline.md")
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
-        f.write(md + "\n")
-    return {"rows": rows, "markdown_path": os.path.abspath(out_path)}
+        f.write(md)
+    return {"rows": rows, "fused_decode": fused,
+            "markdown_path": os.path.abspath(out_path)}
 
 
 if __name__ == "__main__":

@@ -43,6 +43,14 @@ class QuantConfig:
       * ``"abfp_kernel"`` — fused Pallas TPU kernel (``repro.kernels``)
       * ``"abfp_packed"`` — packed Pallas kernel over pre-quantized weights
         (``pack_abfp_weight``): the quantize-once serving path
+      * ``"abfp_fused"``  — the packed path plus (a) per-tile adaptive ADC
+        gains baked into the packed weights (``adaptive_tile_gains``; the
+        paper's amplification knob, chosen per tile from the programmed
+        codes, bounded by ``gain``) and (b) the fused Pallas decode-step
+        kernels (``repro.kernels.abfp_decode_fused``: one QKV launch + one
+        quantized-KV attention kernel) on the single-token decode hot path.
+        At ``gain=1.0`` every per-tile gain is 1 and the path is
+        bit-identical to ``"abfp_packed"``.
     """
 
     tile_width: int = 128          # n — vector length sharing one scale
@@ -66,18 +74,22 @@ class QuantConfig:
     # None = the paper's max-abs scaling.
 
     def replace(self, **kw) -> "QuantConfig":
+        """Return a copy with the given fields replaced."""
         return dataclasses.replace(self, **kw)
 
     @property
     def delta_w(self) -> float:
+        """Weight quantization bin size, delta(bits_w)."""
         return quant_delta(self.bits_w)
 
     @property
     def delta_x(self) -> float:
+        """Activation quantization bin size, delta(bits_x)."""
         return quant_delta(self.bits_x)
 
     @property
     def delta_y(self) -> float:
+        """ADC output quantization bin size, delta(bits_y)."""
         return quant_delta(self.bits_y)
 
     @property
@@ -97,6 +109,21 @@ class QuantConfig:
         return float(
             self.gain * self.delta_x * self.delta_w
             / (self.tile_width * self.delta_y)
+        )
+
+    @property
+    def adc_base_scale(self) -> float:
+        """``adc_code_scale`` at G = 1: d_X * d_W / (n * d_Y).
+
+        The per-tile-gain path (``PackedWeight.gains``) multiplies this base
+        by each tile's own G_t instead of the global ``gain``; computed in
+        float64 for the same tie-resolution guarantee as ``adc_code_scale``.
+        ``f32(adc_base_scale) * 1.0 == f32(adc_code_scale)`` when
+        ``gain == 1.0``, which is what makes the all-ones-gains path
+        bit-identical to the scalar-gain path.
+        """
+        return float(
+            self.delta_x * self.delta_w / (self.tile_width * self.delta_y)
         )
 
     @property
@@ -161,6 +188,7 @@ def tile_scales(v_tiles: Array, scale_dtype=jnp.bfloat16,
 
 
 def safe_scale(s: Array) -> Array:
+    """Replace zero scales with 1.0 so all-zero tiles divide to exact 0."""
     return jnp.where(s == 0.0, 1.0, s)
 
 
@@ -250,6 +278,17 @@ class PackedWeight:
                                       re-pads the weight per call)
       scales: bfloat16 (..., T, Np)   per-(tile, out-column) scales, T=Kp/n
                                       (``cfg.scale_dtype``; bf16 by default)
+      gains : float32  (..., T) or None — OPTIONAL per-tile ADC gains
+                                      (power-of-two, in [1, cfg.gain]; the
+                                      paper's amplification knob, adaptive
+                                      per tile).  When present they REPLACE
+                                      the scalar ``cfg.gain`` in the ADC:
+                                      ``y_t = clamp(round(p_t * base * G_t))``
+                                      amplified before output quantization,
+                                      then divided out (``/ G_t``) in the
+                                      Eq. 6 accumulation.  ``None`` (the
+                                      default) keeps the scalar-gain path
+                                      byte-for-byte unchanged.
 
     Static metadata (pytree aux, hashable):
 
@@ -271,30 +310,42 @@ class PackedWeight:
     n_cols: int
     tile_width: int
     bits_w: int
+    gains: Optional[Array] = None
 
     def tree_flatten(self):
-        return (self.codes, self.scales), (
+        """Flatten to (codes, scales, gains) children + hashable aux.
+
+        A ``None`` gains child flattens to an empty subtree, so packed trees
+        without gains keep their historical structure (two leaves per
+        weight) and every existing tree_map / device_put zip is unchanged.
+        """
+        return (self.codes, self.scales, self.gains), (
             self.k, self.n_cols, self.tile_width, self.bits_w)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        codes, scales = children
-        return cls(codes, scales, *aux)
+        """Rebuild from ``tree_flatten`` output."""
+        codes, scales, gains = children
+        return cls(codes, scales, *aux, gains=gains)
 
     @property
     def kp(self) -> int:
+        """K padded up to whole tiles (the codes' row count)."""
         return self.codes.shape[-2]
 
     @property
     def n_out(self) -> int:
+        """Un-padded output-column count (alias of ``n_cols``)."""
         return self.n_cols
 
     @property
     def n_padded(self) -> int:
+        """N padded up to whole 128-lane blocks (the codes' column count)."""
         return self.codes.shape[-1]
 
     @property
     def num_tiles(self) -> int:
+        """Number of K-tiles, T = Kp / tile_width."""
         return self.scales.shape[-2]
 
     @property
@@ -304,24 +355,31 @@ class PackedWeight:
 
     @property
     def ndim(self) -> int:
+        """Rank of the codes array (leading batch axes + the (Kp, Np) pair)."""
         return self.codes.ndim
 
     def __getitem__(self, idx) -> "PackedWeight":
         """Index leading batch axes (e.g. MoE expert selection) — the packed
         analogue of ``params['wi'][ex]``."""
         return PackedWeight(self.codes[idx], self.scales[idx],
-                            self.k, self.n_cols, self.tile_width, self.bits_w)
+                            self.k, self.n_cols, self.tile_width, self.bits_w,
+                            gains=None if self.gains is None
+                            else self.gains[idx])
 
     def nbytes(self) -> int:
         """HBM footprint of the packed representation."""
-        return self.codes.size * self.codes.dtype.itemsize \
+        total = self.codes.size * self.codes.dtype.itemsize \
             + self.scales.size * self.scales.dtype.itemsize
+        if self.gains is not None:
+            total += self.gains.size * self.gains.dtype.itemsize
+        return total
 
 
 _LANE = 128  # TPU lane width; packed N is pre-aligned to it at pack time.
 
 
-def pack_abfp_weight(w: Array, cfg: QuantConfig) -> PackedWeight:
+def pack_abfp_weight(w: Array, cfg: QuantConfig,
+                     adaptive_gain: bool = False) -> PackedWeight:
     """Quantize a (..., K, N) weight to ABFP once, for the packed serving path.
 
     Bit-identical to the quantization the kernel / ``quantize_weight_tiles``
@@ -335,6 +393,12 @@ def pack_abfp_weight(w: Array, cfg: QuantConfig) -> PackedWeight:
     ``scale_percentile`` configs are rejected: the Pallas kernels (packed
     and unpacked) implement the paper's max-abs scaling only — percentile
     scaling lives in the ``abfp_ref``/scan path.
+
+    ``adaptive_gain=True`` (the ``mode="abfp_fused"`` packing path)
+    additionally derives per-tile ADC gains from the packed codes
+    (``adaptive_tile_gains``) and stores them as ``PackedWeight.gains``;
+    the codes and scales themselves are unaffected (gain acts at the ADC,
+    not on the programmed array).
     """
     if quant_levels(cfg.bits_w) > 127:
         raise ValueError(
@@ -355,11 +419,53 @@ def pack_abfp_weight(w: Array, cfg: QuantConfig) -> PackedWeight:
     s_w = tile_scales(jnp.moveaxis(wt, -2, -1), cfg.scale_dtype)
     w_hat = wt / safe_scale(s_w)[..., None, :]              # (..., T, n, Np)
     codes = encode_codes(w_hat, cfg.bits_w).astype(jnp.int8)
-    return PackedWeight(
+    pw = PackedWeight(
         codes=codes.reshape(*lead, kp, npad),
         scales=s_w.astype(cfg.scale_dtype),
         k=k, n_cols=n_cols, tile_width=n, bits_w=cfg.bits_w,
     )
+    if adaptive_gain:
+        pw = dataclasses.replace(pw, gains=adaptive_tile_gains(pw, cfg))
+    return pw
+
+
+def adaptive_tile_gains(pw: PackedWeight, cfg: QuantConfig) -> Array:
+    """Per-tile power-of-two ADC gains in [1, cfg.gain] — (..., T) f32.
+
+    The paper's amplification knob: the ADC normalizes every tile dot
+    product by the worst case (|p| <= n, full-scale operands on all n
+    rows), so a typical tile's output lands orders of magnitude below full
+    scale and wastes output LSBs.  Gain G_t amplifies tile t's partial
+    product before the b_Y-bit output quantizer and is divided out after
+    (Eq. 5-6), recovering log2(G_t) effective output bits — as long as the
+    amplified product stays inside the ADC range (the clamp absorbs the
+    rare overshoot, exactly like the hardware's saturation).
+
+    "Adaptive" per the ABFP scheme: G_t is chosen from the statistics of
+    tile t's *programmed codes*, which are known at pack time.  For
+    operands with RMS r_x, r_w the central-limit magnitude of the
+    normalized tile dot is ~ sqrt(n) * r_x * r_w / n of full scale; with a
+    conservative unit bound for the activation side (|x_hat| <= 1 by
+    construction) and a 4-sigma guard, the headroom of tile t is
+    ``n / (4 * sqrt(n) * rms(w_hat_t))``.  The gain is the largest power
+    of two below both that headroom and the global ``cfg.gain`` budget —
+    so ``cfg.gain == 1.0`` yields all-ones gains (the exact scalar path)
+    and larger budgets amplify only tiles that can take it.
+    """
+    lvl_w = float(quant_levels(cfg.bits_w))
+    n = pw.tile_width
+    lead = pw.codes.shape[:-2]
+    w_hat = pw.codes.astype(jnp.float32).reshape(
+        *lead, pw.num_tiles, n, pw.n_padded) / lvl_w
+    # RMS over the tile's real columns only — zero-padded lanes carry zero
+    # scales (exact no-ops) and would otherwise deflate the estimate.
+    w_real = w_hat[..., :pw.n_cols]
+    rms = jnp.sqrt(jnp.mean(w_real * w_real, axis=(-2, -1)))    # (..., T)
+    expected = 4.0 * jnp.sqrt(float(n)) * jnp.maximum(rms, 1e-6) / float(n)
+    headroom = 1.0 / expected
+    g = jnp.exp2(jnp.floor(jnp.log2(
+        jnp.clip(headroom, 1.0, float(cfg.gain)))))
+    return g.astype(jnp.float32)
 
 
 def dequantize_packed(pw: PackedWeight) -> Array:
@@ -428,7 +534,12 @@ def packed_output_error_bound(pw: PackedWeight, cfg: QuantConfig) -> Array:
     """
     fp = packed_tile_fingerprint(pw)                        # (..., T, Np)
     s = pw.scales.astype(jnp.float32)
-    adc_err = (0.5 + cfg.noise_lsb) * cfg.bin_y / cfg.gain
+    if pw.gains is not None:
+        # Per-tile gains divide the per-tile ADC rounding envelope.
+        adc_err = ((0.5 + cfg.noise_lsb) * cfg.bin_y
+                   / pw.gains.astype(jnp.float32))[..., :, None]
+    else:
+        adc_err = (0.5 + cfg.noise_lsb) * cfg.bin_y / cfg.gain
     return (fp + s * adc_err).sum(axis=-2)
 
 
@@ -471,13 +582,21 @@ def quantize_input_tiles(x: Array, cfg: QuantConfig):
 
 
 def adc(p_codes: Array, cfg: QuantConfig,
-        noise_lsb_draw: Optional[Array] = None) -> Array:
+        noise_lsb_draw: Optional[Array] = None,
+        tile_gain: Optional[Array] = None) -> Array:
     """Eq. 5/7 in code units: the ADC conversion of an exact integer partial
     product.  Returns output codes in [-L_y, +L_y]; the represented value is
     ``codes * bin_y`` (bin_y = n*delta_y, clamp tau_Y = n).
+
+    ``tile_gain`` (a scalar or broadcastable array) replaces the scalar
+    ``cfg.gain`` with a per-tile amplification G_t:
+    ``y = clamp(round(p * adc_base_scale * G_t + E))`` — the caller divides
+    the represented value by the same G_t in the Eq. 6 accumulation.
     """
-    scale = jnp.float32(cfg.adc_code_scale)
-    v = p_codes * scale
+    if tile_gain is None:
+        v = p_codes * jnp.float32(cfg.adc_code_scale)
+    else:
+        v = p_codes * jnp.float32(cfg.adc_base_scale) * tile_gain
     if noise_lsb_draw is not None:
         v = v + noise_lsb_draw
     lvl = float(quant_levels(cfg.bits_y))
@@ -494,6 +613,7 @@ def abfp_matmul(
     w: Array,
     cfg: QuantConfig,
     key: Optional[Array] = None,
+    tile_gains: Optional[Array] = None,
 ) -> Array:
     """y = ABFP(x @ w) with x: (..., K), w: (K, N) -> (..., N).
 
@@ -503,6 +623,11 @@ def abfp_matmul(
 
         y_q[t] = Q(G * (x_q[t] . w_q[t]) + E; n*delta_y, tau_y = n)   (Eq. 7)
         y     += y_q[t] * s_x[t] * s_w[t] / G                         (Eq. 6)
+
+    ``tile_gains`` (shape (T,), e.g. from ``adaptive_tile_gains``) swaps the
+    global G for a per-tile G_t: amplified before the ADC quantizer in each
+    scan step, divided out in that step's accumulation — the reference
+    semantics of the fused kernel's per-tile gain path.
     """
     if key is None and cfg.noise_lsb > 0.0:
         raise ValueError("noise_lsb > 0 requires a PRNG key")
@@ -530,8 +655,14 @@ def abfp_matmul(
     # directly — values are identical either way (codes are exact integers).
     upcast = jax.default_backend() == "cpu"
 
+    per_tile = tile_gains is not None
+    if per_tile:
+        g_ts = tile_gains.astype(jnp.float32)
+    else:
+        g_ts = jnp.ones((t,), jnp.float32)   # scanned but unused
+
     def step(acc, operand):
-        xq_t, sx_t, wq_t, sw_t, key_t = operand
+        xq_t, sx_t, wq_t, sw_t, key_t, g_t = operand
         if upcast:
             xq_t = xq_t.astype(jnp.float32)
             wq_t = wq_t.astype(jnp.float32)
@@ -543,8 +674,12 @@ def abfp_matmul(
                 minval=-cfg.noise_lsb, maxval=cfg.noise_lsb)
         else:
             e = None
-        y_q = adc(p, cfg, e) * bin_y                                 # Eq. 7
-        acc = acc + y_q * (sx_t[:, None] * sw_t[None, :]) / gain     # Eq. 6
+        if per_tile:
+            y_q = adc(p, cfg, e, tile_gain=g_t) * bin_y              # Eq. 7
+            acc = acc + y_q * (sx_t[:, None] * sw_t[None, :]) / g_t  # Eq. 6
+        else:
+            y_q = adc(p, cfg, e) * bin_y                             # Eq. 7
+            acc = acc + y_q * (sx_t[:, None] * sw_t[None, :]) / gain
         return acc, None
 
     acc0 = jnp.zeros((m, n_out), dtype=cfg.accum_dtype)
@@ -554,6 +689,7 @@ def abfp_matmul(
         w_q,                        # (T, n, N)
         s_w,                        # (T, N)
         keys,
+        g_ts,
     )
     acc, _ = jax.lax.scan(step, acc0, xs)
     return acc.reshape(*batch_shape, n_out).astype(cfg.out_dtype)

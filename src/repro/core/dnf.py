@@ -48,10 +48,12 @@ class NoiseHistogram:
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
+        """Flatten to (edges, cum, mean, std) children; no static aux."""
         return (self.edges, self.cum, self.mean, self.std), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Rebuild from ``tree_flatten`` output."""
         return cls(*children)
 
     # -- construction -------------------------------------------------------
@@ -93,6 +95,7 @@ class NoiseHistogram:
         )
 
     def layer(self, idx) -> "NoiseHistogram":
+        """Select one layer's histogram from a stacked capture."""
         return NoiseHistogram(
             edges=self.edges[idx], cum=self.cum[idx],
             mean=self.mean[idx], std=self.std[idx],

@@ -16,6 +16,8 @@ import dataclasses
 
 @dataclasses.dataclass(frozen=True)
 class AmsDesignPoint:
+    """One AMS hardware design point for the Sec. VI energy accounting."""
+
     tile_width: int        # n: MACs per analog clock (dot-product length)
     adc_bits: float        # b_Y
     gain: float = 1.0
@@ -38,6 +40,7 @@ def energy_ratio(a: AmsDesignPoint, b: AmsDesignPoint) -> float:
 
 
 def macs_per_cycle_ratio(a: AmsDesignPoint, b: AmsDesignPoint) -> float:
+    """Throughput ratio of design a over design b (MACs per analog clock)."""
     return a.tile_width / b.tile_width
 
 

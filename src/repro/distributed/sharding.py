@@ -260,11 +260,15 @@ def serving_param_spec_tree(params: Pytree, mesh: Mesh,
                    if tp > 1 and q is not None and leaf.n_padded % q == 0
                    else None)
             cs = P(*((None,) * (lead + 1)), col)
-            # A PackedWeight of specs: flattens to (codes_spec, scales_spec)
-            # with the SAME aux as the param leaf, so jax.device_put can zip
-            # the two trees leaf-for-leaf.
+            # A PackedWeight of specs: flattens to (codes_spec, scales_spec
+            # [, gains_spec]) with the SAME aux as the param leaf, so
+            # jax.device_put can zip the two trees leaf-for-leaf.  Per-tile
+            # gains index the (contracting) K axis — every column shard
+            # needs the full vector — so they replicate.
+            gs = (None if leaf.gains is None
+                  else P(*((None,) * leaf.gains.ndim)))
             return PackedWeight(cs, cs, leaf.k, leaf.n_cols,
-                                leaf.tile_width, leaf.bits_w)
+                                leaf.tile_width, leaf.bits_w, gains=gs)
         names = _path_names(path)
         spec = _leaf_demote_k(names, leaf.ndim,
                               _leaf_base_spec(names, leaf.ndim))

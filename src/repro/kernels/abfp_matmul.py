@@ -136,10 +136,11 @@ def _hash_uniform(shape, seed, salt):
 
 
 def _abfp_contrib(xt, wq, sw, seed_ref, cfg: QuantConfig, tk: int, n: int,
-                  nj: Optional[int] = None):
+                  nj: Optional[int] = None, g=None, idx=None):
     """Shared per-grid-step ABFP math: everything except how (wq, sw) were
-    obtained.  BOTH kernels route through this one function so the
-    packed == unpacked bit-identity contract lives in exactly one place.
+    obtained.  ALL the ABFP kernels (unpacked, packed, fused decode) route
+    through this one function so the packed == unpacked == fused
+    bit-identity contract lives in exactly one place.
 
     xt: (bm, tk, n) f32 activation tiles;  wq: (tk, n, bn) integer weight
     codes, already cast to the MXU code dtype;  sw: (tk, bn) f32 weight
@@ -153,6 +154,24 @@ def _abfp_contrib(xt, wq, sw, seed_ref, cfg: QuantConfig, tk: int, n: int,
     draws for those blocks, so sharded execution is bit-identical to
     unsharded at any shard count (kernels/ops.dense_tp).  Defaults (offset
     0, nj = num_programs(1)) reproduce the historical single-device salts.
+
+    ``g`` (optional (tk,) f32): per-tile ADC gains (``PackedWeight.gains``,
+    the paper's amplification knob).  Each tile's exact partial product is
+    amplified by G_t before the b_Y-bit output quantizer
+    (``v = p * adc_base_scale * G_t``) and divided back out of that tile's
+    Eq. 6 term (``yq * s_x * s_w / G_t``) — raising effective output
+    precision by log2(G_t) bits with no extra output bits.  ``None`` keeps
+    the scalar ``cfg.gain`` path byte-for-byte unchanged; an all-ones ``g``
+    is bit-identical to the scalar path at ``gain=1.0`` (amplifying and
+    dividing by exactly 1.0 are exact f32 no-ops).
+
+    ``idx`` (optional): explicit grid coordinates
+    ``(i, j, k, nk, nj_g, seed_val)`` replacing the ``pl.program_id`` /
+    ``seed_ref`` reads — the fused decode kernel spans several logical
+    weights in one launch and must reproduce each segment's own
+    single-weight salts, so it computes the per-segment coordinates itself
+    and passes them here.  ``None`` (every single-weight kernel) reads the
+    real grid position, preserving the historical salts exactly.
     """
     bm = xt.shape[0]
     bn = wq.shape[-1]
@@ -179,29 +198,43 @@ def _abfp_contrib(xt, wq, sw, seed_ref, cfg: QuantConfig, tk: int, n: int,
     )                                               # (tk, bm, bn)
 
     # Eq. 5/7: the ADC in code units — same fused f32 constant as the oracle
-    # so round-half-even ties resolve identically.
-    v = p * jnp.float32(cfg.adc_code_scale)
+    # so round-half-even ties resolve identically.  Per-tile gains amplify
+    # each tile's exact product before the output quantizer.
+    if g is None:
+        v = p * jnp.float32(cfg.adc_code_scale)
+    else:
+        v = p * jnp.float32(cfg.adc_base_scale) * g[:, None, None]
     if cfg.noise_lsb > 0.0:
         # One independent uniform noise draw per partial output, in LSB
         # units, salted by the grid position.
-        i = pl.program_id(0)
-        j = pl.program_id(1) + seed_ref[1]          # global column block
-        k = pl.program_id(2)
-        nj_g = nj if nj is not None else pl.num_programs(1)
-        salt = (i * nj_g + j) * pl.num_programs(2) + k
+        if idx is None:
+            i = pl.program_id(0)
+            j = pl.program_id(1) + seed_ref[1]      # global column block
+            k = pl.program_id(2)
+            nk = pl.num_programs(2)
+            nj_g = nj if nj is not None else pl.num_programs(1)
+            seed_val = seed_ref[0]
+        else:
+            i, j, k, nk, nj_g, seed_val = idx
+        salt = (i * nj_g + j) * nk + k
         u = _hash_uniform(
             (tk * bm, bn),
-            seed_ref[0],
+            seed_val,
             jnp.uint32(salt),
         ).reshape(tk, bm, bn)
         v = v + (u - 0.5) * jnp.float32(2.0 * cfg.noise_lsb)
     ly = jnp.float32(2 ** (cfg.bits_y - 1) - 1)
     yq = jnp.clip(jnp.round(v), -ly, ly) * jnp.float32(cfg.bin_y)
 
-    # Eq. 6: rescale partials and sum over the tk tiles in FLOAT32.
+    # Eq. 6: rescale partials and sum over the tk tiles in FLOAT32 (per-tile
+    # gains divide out inside the sum; the scalar gain after it).
+    if g is None:
+        return jnp.sum(
+            yq * sx.T[:, :, None] * sw[:, None, :], axis=0
+        ) / jnp.float32(cfg.gain)                    # (bm, bn)
     return jnp.sum(
-        yq * sx.T[:, :, None] * sw[:, None, :], axis=0
-    ) / jnp.float32(cfg.gain)                        # (bm, bn)
+        yq * sx.T[:, :, None] * sw[:, None, :] / g[:, None, None], axis=0
+    )                                                # (bm, bn)
 
 
 def _abfp_matmul_kernel(
@@ -354,14 +387,22 @@ def _abfp_matmul_packed_kernel(
     x_ref,     # VMEM (bm, bk) f32
     wc_ref,    # VMEM (bk, bn) int8 weight codes
     sw_ref,    # VMEM (tk, bn) scale_dtype weight scales
-    o_ref,     # VMEM (bm, bn)
-    acc_ref,   # VMEM scratch (bm, bn) f32
-    *,
+    *refs,     # [g_ref (tk, 1) f32 gains]  o_ref (bm, bn)  acc_ref scratch
     cfg: QuantConfig,
     tk: int,
     n: int,
     nj: Optional[int] = None,
+    has_gains: bool = False,
 ):
+    """Packed-weight kernel body: codes/scales (and optional per-tile
+    gains) stream straight from HBM into the shared ABFP core."""
+    if has_gains:
+        g_ref, o_ref, acc_ref = refs
+        g = g_ref[...].astype(jnp.float32).reshape(tk)
+    else:
+        o_ref, acc_ref = refs
+        g = None
+
     k = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -381,7 +422,8 @@ def _abfp_matmul_packed_kernel(
     wq = wc_ref[...].astype(cdt).reshape(tk, n, bn)  # (tk, n, bn)
     sw = sw_ref[...].astype(jnp.float32)             # (tk, bn)
 
-    acc_ref[...] += _abfp_contrib(xt, wq, sw, seed_ref, cfg, tk, n, nj=nj)
+    acc_ref[...] += _abfp_contrib(xt, wq, sw, seed_ref, cfg, tk, n, nj=nj,
+                                  g=g)
 
     @pl.when(k == nk - 1)
     def _done():
@@ -411,6 +453,12 @@ def abfp_matmul_packed_pallas(
     this ``cfg``'s tile width / bits_w.  Bit-identical to
     ``abfp_matmul_pallas(x, w, cfg, seed)`` at matching block sizes,
     without re-deriving weight scales/codes on every grid step.
+
+    When ``pw.gains`` is present (the ``mode="abfp_fused"`` adaptive-gain
+    packing), each K tile's partial product is amplified by its own G_t
+    before the ADC and divided out after (see ``_abfp_contrib``); with
+    all-ones gains the output is bit-identical to a gain-free pack at
+    ``cfg.gain == 1.0``.
 
     ``col_block_offset`` / ``num_col_blocks``: tensor-parallel noise-salt
     globalization, as in ``abfp_matmul_pallas``.
@@ -469,17 +517,29 @@ def abfp_matmul_packed_pallas(
     grid = (mp // bm, np_ // bn, kp // bk)
     tk = bk // n
 
+    has_gains = pw.gains is not None
     kernel = functools.partial(
-        _abfp_matmul_packed_kernel, cfg=cfg, tk=tk, n=n, nj=num_col_blocks)
+        _abfp_matmul_packed_kernel, cfg=cfg, tk=tk, n=n, nj=num_col_blocks,
+        has_gains=has_gains)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),                 # seed
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),        # x
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),        # codes
+        pl.BlockSpec((tk, bn), lambda i, j, k: (k, j)),        # scales
+    ]
+    inputs = [seed, x2, wc, sw]
+    if has_gains:
+        # Per-tile gains ride along as a (T, 1) column, blocked over K like
+        # the scales (pad tiles amplify zero scales: exact no-ops).
+        gp = jnp.pad(pw.gains.astype(jnp.float32),
+                     (0, kp // n - pw.num_tiles),
+                     constant_values=1.0).reshape(-1, 1)
+        in_specs.append(pl.BlockSpec((tk, 1), lambda i, j, k: (k, 0)))
+        inputs.append(gp)
     out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),                 # seed
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),        # x
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),        # codes
-            pl.BlockSpec((tk, bn), lambda i, j, k: (k, j)),        # scales
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), cfg.out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
@@ -487,6 +547,6 @@ def abfp_matmul_packed_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(seed, x2, wc, sw)
+    )(*inputs)
 
     return out[:m_dim, :n_dim].reshape(*batch_shape, n_dim)

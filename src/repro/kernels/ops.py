@@ -9,6 +9,12 @@
     scales from HBM.  ``dense`` packs a raw array on the fly (so QAT code
     can flip the mode switch); ``dense_packed`` takes an already-packed
     ``PackedWeight`` — the quantize-once serving path.
+  * ``mode="abfp_fused"``  — the packed path plus the paper's per-tile
+    ADC gains (packed with ``adaptive_gain=True``, applied inside the
+    kernel) and, at serving decode ticks, the fused QKV + attention
+    kernels of ``kernels.abfp_decode_fused`` (dispatched by
+    ``models.layers.attention_block``; every non-decode matmul runs the
+    packed kernel with gains).
 
 All ABFP modes carry the straight-through estimator (paper Eq. 8): the
 backward pass is that of the plain matmul, accumulated in FLOAT32 — this is
@@ -63,8 +69,9 @@ def _dense_fwd_impl(x, w, cfg, key):
         return abfp_matmul(x, w, cfg, key)
     if cfg.mode == "abfp_kernel":
         return abfp_matmul_pallas(x, w, cfg, _key_to_seed(key))
-    if cfg.mode == "abfp_packed":
-        pw = pack_abfp_weight(w, cfg)
+    if cfg.mode in ("abfp_packed", "abfp_fused"):
+        pw = pack_abfp_weight(w, cfg,
+                              adaptive_gain=(cfg.mode == "abfp_fused"))
         return abfp_matmul_packed_pallas(x, pw, cfg, _key_to_seed(key))
     raise ValueError(f"unknown quant mode: {cfg.mode!r}")
 
@@ -116,7 +123,9 @@ def _dense_packed_bwd(cfg, res, g):
     dx = jnp.matmul(g32, w.T).astype(x.dtype)
     zero_codes = np.zeros(pw.codes.shape, dtype=jax.dtypes.float0)
     dpw = PackedWeight(zero_codes, jnp.zeros_like(pw.scales),
-                       pw.k, pw.n_cols, pw.tile_width, pw.bits_w)
+                       pw.k, pw.n_cols, pw.tile_width, pw.bits_w,
+                       gains=None if pw.gains is None
+                       else jnp.zeros_like(pw.gains))
     return dx, dpw, None
 
 
@@ -179,7 +188,7 @@ def tp_col_quantum(cfg: QuantConfig, packed: bool, tp: int) -> Optional[int]:
       shape-dependent ``jax.random`` streams that cannot be
       column-globalized — never sharded.
     """
-    if packed or cfg.mode in ("abfp_kernel", "abfp_packed"):
+    if packed or cfg.mode in ("abfp_kernel", "abfp_packed", "abfp_fused"):
         return tp * _LANE if cfg.noise_lsb > 0.0 else tp
     if cfg.mode == "float":
         return tp
@@ -256,14 +265,23 @@ def dense_tp(x: jax.Array, w, cfg: QuantConfig,
             return gather(jnp.matmul(x_, w_.astype(x_.dtype)))
         args, specs = (x, w), (rep_x, P(None, _MODEL_AXIS))
     elif mode == "packed":
-        def body(x_, codes, scales, *s):
+        has_g = w.gains is not None
+
+        def body(x_, codes, scales, *rest):
+            # Per-tile gains live on the (replicated) K axis, so every
+            # column shard amplifies with the same gain vector.
+            gains = rest[0] if has_g else None
+            s = rest[1:] if has_g else rest
             pw_l = PackedWeight(codes, scales, w.k, codes.shape[-1],
-                                w.tile_width, w.bits_w)
+                                w.tile_width, w.bits_w, gains=gains)
             return gather(abfp_matmul_packed_pallas(
                 x_, pw_l, cfg, s[0] if s else None,
                 col_block_offset=offset(), num_col_blocks=nj_global))
-        args = (x, w.codes, w.scales) + (() if seed is None else (seed,))
+        args = (x, w.codes, w.scales) \
+            + ((w.gains,) if has_g else ()) \
+            + (() if seed is None else (seed,))
         specs = (rep_x, P(None, _MODEL_AXIS), P(None, _MODEL_AXIS)) \
+            + ((P(None),) if has_g else ()) \
             + (() if seed is None else (P(),))
     else:   # abfp_kernel
         def body(x_, w_, *s):

@@ -38,6 +38,7 @@ single-device engine for the same seed (tests/test_sharded_serving.py).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -255,8 +256,18 @@ def main() -> None:
                     help="abfp: pure-jnp scan; abfp-kernel: fused Pallas; "
                          "abfp-packed: weights quantized once at init, "
                          "packed Pallas kernel per tick")
+    ap.add_argument("--fused", action="store_true",
+                    help="abfp_fused serving: packed weights carry per-tile "
+                         "ADC gains (capped by --gain) and decode ticks run "
+                         "the fused QKV + quantized-KV-attention kernels "
+                         "(kernels.abfp_decode_fused); overrides --quant "
+                         "and serves with a quantized (int8) KV cache")
     ap.add_argument("--tile", type=int, default=128)
-    ap.add_argument("--gain", type=float, default=8.0)
+    ap.add_argument("--gain", type=float, default=8.0,
+                    help="ADC gain G (paper Sec. IV): scalar output "
+                         "amplification in abfp modes; with --fused, the "
+                         "per-tile adaptive gain cap (gains are "
+                         "powers of two in [1, G] chosen per weight tile)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--prompt-len", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -353,12 +364,22 @@ def main() -> None:
     built = {}
     for a in archs:
         cfg = smoke_config(a) if args.reduced else get_config(a)
+        if args.fused:
+            # The fused decode kernels attend over the int8 quantized KV
+            # cache; --fused therefore serves with kv_quant on.
+            cfg = dataclasses.replace(cfg, kv_quant=True)
         built[a] = (init_params(jax.random.PRNGKey(args.seed), cfg), cfg)
     mcfg = built[archs[0]][1]
     params = built[archs[0]][0]
     mode = {"float": "float", "abfp": "abfp_ref",
             "abfp-kernel": "abfp_kernel",
             "abfp-packed": "abfp_packed"}[args.quant]
+    if args.fused:
+        # --fused is an ABFP serving mode; with the (default) float quant
+        # it upgrades to the packed config, otherwise it refines whatever
+        # ABFP variant was asked for.
+        mode = "abfp_fused"
+        args.quant = "abfp-fused"
     quant = (QuantConfig(mode=mode, tile_width=args.tile,
                          gain=args.gain, noise_lsb=0.5)
              if mode != "float" else QuantConfig(mode="float"))

@@ -672,6 +672,88 @@ def init_attention(key, mcfg, layer_shape=()) -> dict:
     }
 
 
+def _fused_decode_attention_block(params, x, mcfg, nx, *, positions,
+                                  kv_cache):
+    """One fused-kernel decode tick of ``attention_block``.
+
+    Replaces the packed chain's three ``nx.dense`` projection dispatches
+    with ONE ``fused_qkv_packed_pallas`` launch and the jnp quantized-KV
+    attention with the ``fused_quantized_decode_attention`` Pallas kernel
+    (``kernels.abfp_decode_fused``) — bit-identical to the chain by
+    construction (tests/test_fused.py, tests/test_sharded_serving.py).
+
+    PRNG contract: the packed chain folds ``(base key, call counter)`` per
+    ``Numerics.dense`` call; the fused launch consumes the SAME three
+    (key, counter) pairs for wq/wk/wv — one per weight segment — and bumps
+    the counter identically, so the wo projection (and every later layer)
+    sees an unchanged stream.
+    """
+    from repro.kernels.abfp_decode_fused import (
+        fused_qkv_dense,
+        fused_quantized_decode_attention,
+    )
+
+    b, s, _ = x.shape
+    h, kh, hd = mcfg.num_heads, mcfg.num_kv_heads, mcfg.resolved_head_dim
+
+    keys = []
+    for _ in range(3):                       # wq, wk, wv — in chain order
+        key = None
+        if nx._key is not None and nx.quant.noise_lsb > 0.0:
+            key = jax.random.fold_in(nx._key, nx._count)
+        nx._count += 1
+        keys.append(key)
+    yq, yk, yv = fused_qkv_dense(
+        x, (params["wq"], params["wk"], params["wv"]), nx.quant, keys,
+        nx.mesh)
+    q = yq.reshape(b, s, h, hd)
+    k = yk.reshape(b, s, kh, hd)
+    v = yv.reshape(b, s, kh, hd)
+    if mcfg.pos_type == "rope":
+        q = rope(q, positions, mcfg.rope_theta, mcfg.rope_fraction)
+        k = rope(k, positions, mcfg.rope_theta, mcfg.rope_fraction)
+
+    # ``_append_attend_one``'s quantized branch (window == 0: slot ==
+    # length), with the attention einsum chain swapped for the Pallas
+    # kernel.  Under a mesh the jnp form runs instead: it is bit-identical
+    # to the kernel (enforced by test) and partitions under GSPMD, which a
+    # pallas_call does not.
+    length = kv_cache["length"]
+    bidx = jnp.arange(b)
+    kc, ks = _kv_encode(k[:, 0])
+    vc, vs = _kv_encode(v[:, 0])
+    k_cache = kv_cache["k"].at[bidx, length].set(kc)
+    v_cache = kv_cache["v"].at[bidx, length].set(vc)
+    k_scale = kv_cache["k_scale"].at[bidx, length].set(ks)
+    v_scale = kv_cache["v_scale"].at[bidx, length].set(vs)
+    if nx.mesh is None:
+        out = fused_quantized_decode_attention(
+            q, k_cache, k_scale, v_cache, v_scale, lengths=length + 1)
+    else:
+        out = quantized_decode_attention(
+            q, k_cache, k_scale, v_cache, v_scale, lengths=length + 1)
+    new_cache = {"k": k_cache, "v": v_cache, "length": length + 1,
+                 "k_scale": k_scale, "v_scale": v_scale}
+    return nx.dense(out.reshape(b, s, h * hd), params["wo"]), new_cache
+
+
+def _use_fused_decode(params, nx, s, kv_cache, cross_kv, window, n_tokens):
+    """Does this ``attention_block`` call hit the fused decode fast path?
+
+    Fused mode + a single-token decode tick on an (unpaged, un-windowed)
+    quantized KV cache with all three projection weights packed.  Anything
+    else — prefill chunks, float/paged/windowed caches, unpacked weights —
+    falls back to the packed chain, which computes the same numbers
+    dispatch-by-dispatch (gains included, via ``dense_packed``).
+    """
+    return (nx.quant.mode == "abfp_fused"
+            and s == 1 and n_tokens is None and window == 0
+            and kv_cache is not None and cross_kv is None
+            and "k_pages" not in kv_cache and "k_scale" in kv_cache
+            and all(isinstance(params[w], PackedWeight)
+                    for w in ("wq", "wk", "wv")))
+
+
 def attention_block(
     params: dict,
     x: Array,
@@ -704,6 +786,13 @@ def attention_block(
     """
     b, s, _ = x.shape
     h, kh, hd = mcfg.num_heads, mcfg.num_kv_heads, mcfg.resolved_head_dim
+
+    if _use_fused_decode(params, nx, s, kv_cache, cross_kv, window,
+                         n_tokens):
+        # abfp_fused decode tick: one fused QKV launch + Pallas quantized
+        # attention, bit-identical to the chain below at matching gains.
+        return _fused_decode_attention_block(
+            params, x, mcfg, nx, positions=positions, kv_cache=kv_cache)
 
     q = nx.dense(x, params["wq"]).reshape(b, s, h, hd)
     if cross_kv is None:

@@ -498,7 +498,14 @@ def decode_step(
     enc_kv=None,
 ):
     """One decode step.  token: (B,) int32 (or (B, d) embeds).
-    Returns (logits (B, V) f32, new_state)."""
+    Returns (logits (B, V) f32, new_state).
+
+    With ``nx.quant.mode == "abfp_fused"`` (packed weights with per-tile
+    ADC gains, quantized KV cache) every full-attention layer's tick runs
+    the fused QKV + attention kernels instead of the dispatch chain —
+    see ``models.layers._fused_decode_attention_block`` — with identical
+    PRNG threading, so greedy decode matches the packed chain bit-for-bit
+    at gain 1.0."""
     nx = nx or Numerics(QuantConfig(mode="float"))
     b = token.shape[0]
     positions = state["position"][:, None]                   # (B, 1)

@@ -65,14 +65,23 @@ def pack_model_params(params: dict, cfg: QuantConfig,
     scales are column-sharded TOGETHER over the 'model' axis (per-(tile,
     col) scales travel with their codes), unsplittable weights and digital
     leaves (norms, embed, routers) replicate.
+
+    ``mode="abfp_fused"`` additionally derives per-tile ADC gains from the
+    packed codes (``core.abfp.adaptive_tile_gains`` — the paper's
+    amplification knob) and stores them as ``PackedWeight.gains``; the
+    packed and fused kernels amplify each tile before the output quantizer
+    and divide the gain back out.  At ``cfg.gain == 1.0`` the gains are all
+    ones and the packed tree is numerically identical to an
+    ``abfp_packed`` pack.
     """
+    adaptive = cfg.mode == "abfp_fused"
 
     def pack(path, leaf):
         if isinstance(leaf, PackedWeight):
             return leaf
         if _leaf_name(path) in DENSE_WEIGHT_NAMES and getattr(
                 leaf, "ndim", 0) >= 2:
-            return pack_abfp_weight(leaf, cfg)
+            return pack_abfp_weight(leaf, cfg, adaptive_gain=adaptive)
         return leaf
 
     packed = jax.tree_util.tree_map_with_path(pack, params)
@@ -82,7 +91,8 @@ def pack_model_params(params: dict, cfg: QuantConfig,
     if tied:
         # The tied head multiplies by embed.T; pack that transpose once so
         # decode never touches the float embedding table for the head.
-        packed["lm_head"] = pack_abfp_weight(params["embed"].T, cfg)
+        packed["lm_head"] = pack_abfp_weight(params["embed"].T, cfg,
+                                             adaptive_gain=adaptive)
     if mesh is not None:
         from repro.distributed.sharding import shard_serving_params
         packed = shard_serving_params(packed, mesh, cfg)

@@ -204,12 +204,15 @@ class ServingEngine:
                  tenant_quota: Optional[int] = None):
         self.mesh = mesh
         self.runner = runner if runner is not None else runner_for(mcfg)
-        if quant.mode == "abfp_packed":
+        if quant.mode in ("abfp_packed", "abfp_fused"):
             # Quantize-once: pack every dense weight at admission time so
             # the per-tick decode path only streams int8 codes + bf16
             # scales (the paper's program-the-array-once deployment).  With
             # a mesh, codes + scales are column-sharded together over the
-            # 'model' axis as part of the same one-time step.
+            # 'model' axis as part of the same one-time step.  abfp_fused
+            # additionally bakes per-tile ADC gains into each PackedWeight
+            # and routes decode ticks through the fused QKV + attention
+            # kernels (kernels.abfp_decode_fused).
             from repro.models.packing import pack_model_params
             params = pack_model_params(params, quant, mcfg, mesh=mesh)
         elif mesh is not None:

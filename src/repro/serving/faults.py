@@ -280,7 +280,8 @@ def _zero_cols(leaf, cols: Sequence[int]):
         return PackedWeight(
             leaf.codes.at[..., idx].set(0),
             leaf.scales.at[..., idx].set(0),
-            leaf.k, leaf.n_cols, leaf.tile_width, leaf.bits_w)
+            leaf.k, leaf.n_cols, leaf.tile_width, leaf.bits_w,
+            gains=leaf.gains)
     return leaf.at[..., idx].set(0)
 
 
@@ -306,7 +307,8 @@ def inject_scale_drift(params: Any, path: str,
         s32 = leaf.scales.astype(jnp.float32)
         s32 = s32.at[..., t, j].multiply(f)
         return PackedWeight(leaf.codes, s32.astype(leaf.scales.dtype),
-                            leaf.k, leaf.n_cols, leaf.tile_width, leaf.bits_w)
+                            leaf.k, leaf.n_cols, leaf.tile_width,
+                            leaf.bits_w, gains=leaf.gains)
 
     return _map_site(params, path, drift)
 
@@ -441,7 +443,8 @@ def repair_stuck(params: Any, clean: Any, path: str,
             return PackedWeight(
                 leaf.codes.at[..., idx].set(src.codes[..., idx]),
                 leaf.scales.at[..., idx].set(src.scales[..., idx]),
-                leaf.k, leaf.n_cols, leaf.tile_width, leaf.bits_w)
+                leaf.k, leaf.n_cols, leaf.tile_width, leaf.bits_w,
+                gains=leaf.gains)
         return leaf.at[..., idx].set(src[..., idx])
 
     return _map_site(params, path, fix)
@@ -464,6 +467,7 @@ def repair_drift(params: Any, clean: Any, path: str,
         return PackedWeight(
             leaf.codes,
             leaf.scales.at[..., t, j].set(src.scales[..., t, j]),
-            leaf.k, leaf.n_cols, leaf.tile_width, leaf.bits_w)
+            leaf.k, leaf.n_cols, leaf.tile_width, leaf.bits_w,
+            gains=leaf.gains)
 
     return _map_site(params, path, fix)

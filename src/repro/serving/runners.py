@@ -108,6 +108,16 @@ class ModelRunner:
 
     # -- jit-ready closures (the engine jits these verbatim) ---------------
     def make_step(self, quant, mesh):
+        """Build the jit-ready decode-tick closure.
+
+        ``quant`` selects the whole numerics stack inside the closure via
+        ``Numerics``: with ``mode="abfp_fused"`` (and the weights packed
+        with per-tile gains at engine init) every decode tick's attention
+        block routes through the fused QKV + quantized-attention kernels
+        of ``kernels.abfp_decode_fused``; the closure itself is identical
+        across modes, so the engine jits exactly one step function either
+        way.
+        """
         mcfg = self.mcfg
 
         def _step(params, state, token, key):

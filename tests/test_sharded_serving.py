@@ -42,6 +42,14 @@ PROMPTS = [[3, 5, 7, 9, 11], [2, 4, 6], [8, 1, 2, 3, 4, 5, 6, 7, 9], [13]]
 FLOAT = QuantConfig(mode="float")
 PACKED = QuantConfig(mode="abfp_packed", tile_width=32, gain=4.0,
                      noise_lsb=0.5)
+# Gain 1.0 pair: the fused decode kernels must be bit-identical to the
+# packed dispatch chain (all-ones per-tile gains are exact no-ops).
+PACKED1 = QuantConfig(mode="abfp_packed", tile_width=32, gain=1.0,
+                      noise_lsb=0.5)
+FUSED1 = QuantConfig(mode="abfp_fused", tile_width=32, gain=1.0,
+                     noise_lsb=0.5)
+FUSED4 = QuantConfig(mode="abfp_fused", tile_width=32, gain=4.0,
+                     noise_lsb=0.5)
 
 
 def _serve(mcfg, params, quant, mesh, *, max_new=4, max_len=32, **ekw):
@@ -60,6 +68,13 @@ def tinyllama():
     mcfg = smoke_config("tinyllama-1.1b")
     params = init_params(jax.random.PRNGKey(0), mcfg)
     return mcfg, params
+
+
+@pytest.fixture(scope="module")
+def tinyllama_kvq(tinyllama):
+    """Same params, int8 KV cache — the fused decode kernel's habitat."""
+    mcfg, params = tinyllama
+    return dataclasses.replace(mcfg, kv_quant=True), params
 
 
 @pytest.fixture(scope="module")
@@ -89,6 +104,34 @@ def test_packed_parity_bit_identical(tinyllama, tinyllama_base_packed,
     mesh = jax.make_mesh(shape, ("data", "model"))
     got = _serve(*tinyllama, PACKED, mesh)
     assert got == tinyllama_base_packed, shape
+
+
+@pytest.fixture(scope="module")
+def tinyllama_base_packed1_kvq(tinyllama_kvq):
+    return _serve(*tinyllama_kvq, PACKED1, None)
+
+
+@pytest.mark.parametrize("shape", MESH_SHAPES)
+def test_fused_parity_bit_identical(tinyllama_kvq,
+                                    tinyllama_base_packed1_kvq, shape):
+    """The tentpole gate: abfp_fused (fused QKV + quantized-KV attention,
+    per-tile ADC gains) at gain 1.0 emits bit-identical greedy tokens to
+    the single-device abfp_packed engine at EVERY mesh shape — dp-only,
+    tp-only, and the full (2, 4) mesh, seeded ADC noise included."""
+    mesh = jax.make_mesh(shape, ("data", "model"))
+    got = _serve(*tinyllama_kvq, FUSED1, mesh)
+    assert got == tinyllama_base_packed1_kvq, shape
+
+
+@pytest.mark.parametrize("shape", MESH_SHAPES)
+def test_fused_gain_mesh_self_parity(tinyllama_kvq, shape):
+    """With real amplification (gain cap 4.0, adaptive per-tile gains) the
+    mesh engine matches the single-device FUSED engine bit-for-bit: the
+    gains table shards/replicates without perturbing a single logit."""
+    base = _serve(*tinyllama_kvq, FUSED4, None)
+    mesh = jax.make_mesh(shape, ("data", "model"))
+    got = _serve(*tinyllama_kvq, FUSED4, mesh)
+    assert got == base, shape
 
 
 @pytest.mark.parametrize("shape", MESH_SHAPES)

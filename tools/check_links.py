@@ -1,0 +1,88 @@
+"""Markdown link checker — stdlib only, no network.
+
+Scans README.md and docs/*.md for inline links/images and validates the
+RELATIVE ones against the working tree: the target file (or directory)
+must exist, and a ``#fragment`` into a markdown file must match one of
+its headings (GitHub anchor slugs).  External (http/https/mailto) links
+are skipped — CI must not flake on the internet.
+
+Usage: python tools/check_links.py [file-or-dir ...]
+Exits nonzero listing every broken link (path:line: target).
+"""
+
+import pathlib
+import re
+import sys
+
+# Inline [text](target) and ![alt](target); ignores ```code fences``` below.
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_FENCE = re.compile(r"^\s*(```|~~~)")
+
+
+def _anchor(heading: str) -> str:
+    """GitHub's heading -> anchor slug (lowercase, spaces to dashes)."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _anchors(md_path: pathlib.Path) -> set:
+    out = set()
+    fenced = False
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        if _FENCE.match(line):
+            fenced = not fenced
+        elif not fenced and line.startswith("#"):
+            out.add(_anchor(line.lstrip("#")))
+    return out
+
+
+def check_file(path: pathlib.Path) -> list:
+    """Return (line_no, target, reason) tuples for broken relative links."""
+    errors = []
+    fenced = False
+    for i, line in enumerate(path.read_text(encoding="utf-8").splitlines(),
+                             start=1):
+        if _FENCE.match(line):
+            fenced = not fenced
+            continue
+        if fenced:
+            continue
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            base, _, frag = target.partition("#")
+            if not base:            # same-file #fragment
+                if frag and _anchor(frag) not in _anchors(path):
+                    errors.append((i, target, "missing anchor"))
+                continue
+            dest = (path.parent / base).resolve()
+            if not dest.exists():
+                errors.append((i, target, "missing file"))
+                continue
+            if frag and dest.suffix == ".md":
+                if _anchor(frag) not in _anchors(dest):
+                    errors.append((i, target, "missing anchor"))
+    return errors
+
+
+def main(argv) -> int:
+    """Check the given files/dirs (default: README.md + docs/)."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    args = [pathlib.Path(a) for a in argv] or [root / "README.md",
+                                               root / "docs"]
+    files = []
+    for a in args:
+        files.extend(sorted(a.rglob("*.md")) if a.is_dir() else [a])
+    broken = 0
+    for f in files:
+        for line, target, reason in check_file(f):
+            print(f"{f.relative_to(root)}:{line}: {reason}: {target}")
+            broken += 1
+    print(f"[check_links] {len(files)} files, {broken} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
