@@ -16,7 +16,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: lint check-links test-fast test test-slow test-dist test-faults test-overload test-fleet bench bench-smoke bench-serving bench-faults bench-overload bench-fleet
+.PHONY: lint check-links test-fast test test-slow test-dist test-faults test-overload test-fleet test-async bench bench-smoke bench-serving bench-faults bench-overload bench-fleet bench-utilization
 
 lint:
 	@if command -v ruff >/dev/null 2>&1; then \
@@ -101,3 +101,17 @@ test-fleet:
 # per-model conservation failure or a quality miss — the CI fleet gate.
 bench-fleet:
 	$(PY) benchmarks/bench_serving.py --fleet-only
+
+# Overlapped async-serving suite: wall-clock dispatch pipeline parity
+# (overlapped == simulated-clock, bit for bit), DeviceStream seam, and the
+# three tick-loop sync-bug regressions.  Timing-assertion-free (fake
+# clocks only) so it passes on loaded CI hosts.
+test-async:
+	$(PY) -m pytest -q -m async
+
+# Overlapped-vs-blocking utilization smoke gate: measures tick utilization
+# (device-busy / engine-active wall time) for both dispatch policies at
+# open-loop load 0.9 on THIS host -> BENCH_serving_utilization.json.
+# Exits nonzero if overlap fails to beat blocking — the CI async gate.
+bench-utilization:
+	$(PY) benchmarks/bench_serving.py --utilization-gate

@@ -14,6 +14,13 @@ and requests arrive by a Poisson process whose rate is a ``--loads``
 multiple of the calibrated closed-loop service rate.  Reported per cell:
 p50/p99 TTFT, p50 TPOT, and goodput (requests finishing within the TTFT
 SLO per second; the SLO is 3x the calibrated per-request p50 TTFT).
+Full runs measure each (mode, load) cell twice — BLOCKING dispatch
+(fetch-per-tick) and the OVERLAPPED pipeline (on-device sampling,
+background delivery, dispatch-ahead) — and record ``tick_utilization``
+(device-busy over engine-active wall time) for both.
+``--utilization-gate`` runs only the blocking-vs-overlapped comparison at
+load 0.9 and writes BENCH_serving_utilization.json (the CI async gate:
+overlap must not utilize the device less than blocking).
 
     PYTHONPATH=src python benchmarks/bench_serving.py         # BENCH_serving.json
     PYTHONPATH=src python benchmarks/bench_serving.py --smoke # tiny shapes; writes
@@ -106,29 +113,58 @@ def bench_cell(params, mcfg, *, mode, chunked, capacity, prompt_len,
             "ticks": ticks}
 
 
-def bench_open_loop(params, mcfg, *, mode, load, capacity, prompt_len,
-                    max_new, max_len, chunks, seed, n_requests,
-                    slo_scale=3.0):
-    """One open-loop cell: wall-clock engine, Poisson arrivals at ``load``
-    x the calibrated service rate, FCFS admission."""
+def calibrate_open_loop(params, mcfg, *, mode, capacity, prompt_len,
+                        max_new, max_len, chunks, seed, slo_scale=3.0):
+    """Closed-loop calibration on a BLOCKING wall-clock engine: service
+    rate (req/s at full occupancy) and the TTFT SLO every open-loop cell
+    of this mode is judged against.  Shared between the blocking and the
+    overlapped cells so their SLOs (and arrival processes) are identical."""
     eng = ServingEngine(params, mcfg, capacity=capacity, max_len=max_len,
                         quant=_quant(mode), seed=seed, chunked=True,
                         prefill_chunks=chunks, policy="fcfs",
                         clock=time.perf_counter)
     _warm(eng, mcfg, chunked=True, chunks=chunks, capacity=capacity,
           max_len=max_len)
-
-    # Calibrate: closed-loop service rate and per-request TTFT at full
-    # occupancy (engine metrics are in wall seconds — clock=perf_counter).
     eng.metrics.reset()
     _, total_s, _, _ = _run(
         eng, _workload(mcfg, capacity, prompt_len, max_new, seed=seed + 1))
     service_rps = capacity / total_s
-    calib = eng.metrics.summary()
-    slo_ttft = slo_scale * calib["ttft"]["p50"]
+    slo_ttft = slo_scale * eng.metrics.summary()["ttft"]["p50"]
+    return {"service_rps": service_rps, "slo_ttft": slo_ttft}
 
+
+def bench_open_loop(params, mcfg, *, mode, load, capacity, prompt_len,
+                    max_new, max_len, chunks, seed, n_requests,
+                    slo_scale=3.0, overlap=False, calib=None):
+    """One open-loop cell: wall-clock engine, Poisson arrivals at ``load``
+    x the calibrated service rate, FCFS admission.  ``overlap=True`` runs
+    the same cell through the overlapped dispatch pipeline (on-device
+    sampling, background delivery); the row then also reports tick
+    utilization (device-busy over engine-active wall time)."""
+    if calib is None:
+        calib = calibrate_open_loop(
+            params, mcfg, mode=mode, capacity=capacity,
+            prompt_len=prompt_len, max_new=max_new, max_len=max_len,
+            chunks=chunks, seed=seed, slo_scale=slo_scale)
+    slo_ttft = calib["slo_ttft"]
+
+    eng = ServingEngine(params, mcfg, capacity=capacity, max_len=max_len,
+                        quant=_quant(mode), seed=seed, chunked=True,
+                        prefill_chunks=chunks, policy="fcfs",
+                        clock=time.perf_counter, overlap=overlap)
+    # AOT-compile the decode tick + every prefill bucket, then run a small
+    # warm workload to compile the per-admission jits (slot reset/attach)
+    # too — no compile may land inside the timed window.  The warm pass
+    # also pays the first-dispatch overhead per shape, so both cells start
+    # steady-state; metrics (incl. the utilization gauges) reset after.
+    eng.warmup()
+    _warm(eng, mcfg, chunked=True, chunks=chunks, capacity=capacity,
+          max_len=max_len)
+    eng.sync()
+    eng._drain_delivered()
     eng.metrics.reset()
-    rate = load * service_rps
+
+    rate = load * calib["service_rps"]
     rng = np.random.default_rng(seed)
     offsets = np.cumsum(rng.exponential(1.0 / rate, n_requests))
     t0 = time.perf_counter()
@@ -142,11 +178,13 @@ def bench_open_loop(params, mcfg, *, mode, load, capacity, prompt_len,
     duration = time.perf_counter() - t0
     s = eng.metrics.summary()
     good = eng.metrics.goodput(slo_ttft, duration=duration)
+    eng.close()
 
     def _round(v, nd=4):
         return None if v is None else round(v, nd)
 
-    return {"mode": mode, "load": load,
+    tu = s["tick_utilization"]
+    return {"mode": mode, "load": load, "overlap": overlap,
             "arrival_rate_rps": round(rate, 2),
             "ttft_p50_s": _round(s["ttft"]["p50"]),
             "ttft_p99_s": _round(s["ttft"]["p99"]),
@@ -154,7 +192,10 @@ def bench_open_loop(params, mcfg, *, mode, load, capacity, prompt_len,
             "slo_ttft_s": round(slo_ttft, 4),
             "goodput_rps": _round(good, 2),
             "finished": len(done),
-            "max_queue_depth": s["queue_depth"]["max"]}
+            "max_queue_depth": s["queue_depth"]["max"],
+            "tick_utilization": _round(tu["value"]),
+            "device_busy_s": _round(tu["device_busy_s"]),
+            "active_s": _round(tu["active_s"])}
 
 
 # ---------------------------------------------------------------------------
@@ -165,7 +206,34 @@ FAULT_RATES = (0.001, 0.01, 0.05)
 
 # Stamped into every BENCH json this script writes; bump when row fields
 # change shape so downstream tooling can dispatch on it.
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
+
+
+# ---------------------------------------------------------------------------
+# Overlapped-dispatch utilization gate: overlap must not idle the device
+# more than blocking does on the same host at the same load
+# ---------------------------------------------------------------------------
+
+def bench_utilization_gate(params, mcfg, *, seed, load=0.9,
+                           prompt_len=48, capacity=4, max_new=8,
+                           max_len=128, chunks=(8, 16), n_requests=16):
+    """Blocking vs overlapped open-loop cells at the SAME load on the SAME
+    host, sharing one calibration (identical arrival process + SLO).  The
+    gate passes when the overlapped pipeline's tick utilization is at
+    least the blocking engine's (small epsilon for run-to-run jitter):
+    dispatching ahead must never leave the device MORE host-starved than
+    synchronous fetch-per-tick does."""
+    cell = dict(mode="float", capacity=capacity, prompt_len=prompt_len,
+                max_new=max_new, max_len=max_len, chunks=chunks, seed=seed)
+    calib = calibrate_open_loop(params, mcfg, **cell)
+    blocking = bench_open_loop(params, mcfg, load=load, overlap=False,
+                               calib=calib, n_requests=n_requests, **cell)
+    overlapped = bench_open_loop(params, mcfg, load=load, overlap=True,
+                                 calib=calib, n_requests=n_requests, **cell)
+    b, o = blocking["tick_utilization"], overlapped["tick_utilization"]
+    ok = (b is not None and o is not None and o >= b - 0.02)
+    return {"load": load, "blocking": blocking, "overlapped": overlapped,
+            "pass": bool(ok)}
 
 
 def bench_fault_sweep(params, mcfg, *, mode, seed,
@@ -726,10 +794,51 @@ def main() -> None:
                          "xlstm-350m)")
     ap.add_argument("--no-fleet", action="store_true",
                     help="skip the fleet bench + quality grid on full runs")
+    ap.add_argument("--utilization-gate", action="store_true",
+                    help="run ONLY the blocking-vs-overlapped tick-"
+                         "utilization comparison at open-loop load 0.9 and "
+                         "write BENCH_serving_utilization.json; exits "
+                         "nonzero when the overlapped pipeline utilizes the "
+                         "device less than the blocking engine on this "
+                         "host (the CI async gate)")
     args = ap.parse_args()
 
     if args.mesh_one:
         mesh_one(args)
+        return
+
+    if args.utilization_gate:
+        mcfg = smoke_config(args.arch)
+        params = init_params(jax.random.PRNGKey(args.seed), mcfg)
+        print("[bench_serving] utilization gate: blocking vs overlapped "
+              "at open-loop load 0.9")
+        gate = bench_utilization_gate(params, mcfg, seed=args.seed)
+        for label in ("blocking", "overlapped"):
+            r = gate[label]
+            print(f"  {label:10s} tick_utilization {r['tick_utilization']} "
+                  f"(device busy {r['device_busy_s']}s of {r['active_s']}s "
+                  f"active)  ttft p50 {r['ttft_p50_s']}s  "
+                  f"goodput {r['goodput_rps']} req/s")
+        out = args.out
+        if out is None:
+            root = Path(__file__).resolve().parent.parent
+            out = str(root / "BENCH_serving_utilization.json")
+        Path(out).write_text(json.dumps({
+            "schema_version": SCHEMA_VERSION,
+            "benchmark": "serving_utilization",
+            "arch": args.arch, "reduced": True,
+            "backend": jax.default_backend(),
+            "utilization_gate": gate,
+            "gate": {"pass": gate["pass"],
+                     "metric": "overlapped tick_utilization >= blocking "
+                               "(epsilon 0.02) at load 0.9"},
+        }, indent=2) + "\n")
+        print(f"[bench_serving] wrote {out}")
+        if not gate["pass"]:
+            print("[bench_serving] utilization gate FAIL: overlapped "
+                  "pipeline utilized the device less than blocking")
+            sys.exit(1)
+        print("[bench_serving] utilization gate OK")
         return
 
     fault_rates = (tuple(float(x) for x in args.fault_rates.split(","))
@@ -892,19 +1001,26 @@ def main() -> None:
 
     open_rows = []
     for mode in args.modes.split(","):
+        cell = dict(capacity=args.capacity, prompt_len=args.prompt_len,
+                    max_new=args.max_new, max_len=args.max_len,
+                    chunks=chunks, seed=args.seed)
+        calib = calibrate_open_loop(params, mcfg, mode=mode, **cell)
         for load in loads:
-            row = bench_open_loop(
-                params, mcfg, mode=mode, load=load,
-                capacity=args.capacity, prompt_len=args.prompt_len,
-                max_new=args.max_new, max_len=args.max_len, chunks=chunks,
-                seed=args.seed, n_requests=n_open)
-            open_rows.append(row)
-            print(f"  {mode:12s} load {load:3.1f}  "
-                  f"ttft p50 {row['ttft_p50_s']:7.3f}s "
-                  f"p99 {row['ttft_p99_s']:7.3f}s  "
-                  f"goodput {row['goodput_rps']} req/s "
-                  f"(slo {row['slo_ttft_s']:.3f}s)  "
-                  f"qdepth<= {row['max_queue_depth']}")
+            for overlap in ((False, True) if not args.smoke
+                            else (False,)):
+                row = bench_open_loop(
+                    params, mcfg, mode=mode, load=load, overlap=overlap,
+                    calib=calib, n_requests=n_open, **cell)
+                open_rows.append(row)
+                tu = row["tick_utilization"]
+                print(f"  {mode:12s} load {load:3.1f} "
+                      f"{'overlap ' if overlap else 'blocking'} "
+                      f"ttft p50 {row['ttft_p50_s']:7.3f}s "
+                      f"p99 {row['ttft_p99_s']:7.3f}s  "
+                      f"goodput {row['goodput_rps']} req/s "
+                      f"(slo {row['slo_ttft_s']:.3f}s)  "
+                      f"util {'-' if tu is None else f'{tu:.2f}'}  "
+                      f"qdepth<= {row['max_queue_depth']}")
 
     mesh_rows = []
     if not args.smoke and not args.no_mesh_sweep:

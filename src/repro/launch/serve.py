@@ -346,7 +346,22 @@ def main() -> None:
                     help="per-request deadline in ticks after arrival; "
                          "expired requests are cancelled and counted "
                          "timed_out")
+    # Overlapped wall-clock serving (repro.serving.stream).
+    ap.add_argument("--wall-clock", action="store_true",
+                    help="drive the engine on time.perf_counter instead of "
+                         "the simulated tick clock (latencies/SLOs are then "
+                         "in SECONDS)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped dispatch pipeline: sample on device, "
+                         "keep tokens unfetched, dispatch tick N+1 before "
+                         "tick N's transfer resolves, deliver tokens from a "
+                         "background worker; implies --wall-clock")
+    ap.add_argument("--inflight", type=int, default=4,
+                    help="dispatch-ahead depth for --overlap (bound on "
+                         "submitted-but-undelivered passes)")
     args = ap.parse_args()
+    if args.overlap:
+        args.wall_clock = True
 
     mesh_shape = parse_mesh(args.mesh)
     mesh = None
@@ -415,6 +430,13 @@ def main() -> None:
               f"{args.pool_pages or 'auto'}, prefix_cache="
               f"{not args.no_prefix_cache}, preemption="
               f"{not args.no_preemption}, watermarks=({wm_hi}, {wm_lo})")
+    if args.wall_clock:
+        unit = "s"
+        print(f"[serve] wall clock: overlap="
+              f"{'on' if args.overlap else 'off (blocking)'}"
+              + (f", inflight={args.inflight}" if args.overlap else ""))
+    else:
+        unit = "ticks"
     eng = ServingEngine(params, mcfg, capacity=args.capacity,
                         max_len=args.max_len, quant=quant, seed=args.seed,
                         chunked=not args.no_chunked,
@@ -433,21 +455,33 @@ def main() -> None:
                         queue_watermark=args.queue_watermark,
                         page_watermarks=(wm_hi, wm_lo),
                         degraded_max_new=args.degraded_max_new,
-                        tenant_quota=args.tenant_quota)
+                        tenant_quota=args.tenant_quota,
+                        clock=time.perf_counter if args.wall_clock else None,
+                        overlap=args.overlap,
+                        inflight=args.inflight)
+    if args.wall_clock:
+        eng.warmup()        # no compile inside the measured serve window
     rng = np.random.default_rng(args.seed)
 
     open_loop = args.arrival_rate is not None or args.trace is not None
     if open_loop:
         reqs = (trace_workload(mcfg, args, rng) if args.trace
                 else poisson_workload(mcfg, args, rng))
+        if args.wall_clock:
+            # Workload arrivals are relative offsets; the wall clock reads
+            # an arbitrary epoch, so rebase them onto "now".
+            base = time.perf_counter()
+            for r in reqs:
+                r.arrival_time = base + (r.arrival_time or 0.0)
         if args.deadline is not None:
             for r in reqs:
                 r.deadline = (r.arrival_time or 0.0) + args.deadline
         for r in reqs:
             eng.submit(r)
-        span = max(r.arrival_time for r in reqs) if reqs else 0.0
+        span = (max(r.arrival_time for r in reqs)
+                - min(r.arrival_time for r in reqs)) if reqs else 0.0
         print(f"[serve] open-loop: {len(reqs)} requests arriving over "
-              f"{span:.1f} ticks, {args.tenants} tenants")
+              f"{span:.1f} {unit}, {args.tenants} tenants")
         t0 = time.time()
         done = eng.drain()
         dt = time.time() - t0
@@ -474,14 +508,24 @@ def main() -> None:
         return "-" if v is None else f"{v:.2f}"
 
     print(f"[serve] TTFT p50 {fmt(ttft, 'p50')} / p99 {fmt(ttft, 'p99')} "
-          f"ticks | TPOT p50 {fmt(tpot, 'p50')} / p99 {fmt(tpot, 'p99')} "
-          f"ticks | E2E p50 {fmt(e2e, 'p50')} / p99 {fmt(e2e, 'p99')} ticks")
+          f"{unit} | TPOT p50 {fmt(tpot, 'p50')} / p99 {fmt(tpot, 'p99')} "
+          f"{unit} | E2E p50 {fmt(e2e, 'p50')} / p99 {fmt(e2e, 'p99')} "
+          f"{unit}")
     good = eng.metrics.goodput(args.slo_ttft)
     util = s["utilization"]["mean"]
     print(f"[serve] goodput {good if good is None else round(good, 3)} "
-          f"req/tick (TTFT<={args.slo_ttft}), utilization "
+          f"req/{unit.rstrip('s') or 's'} (TTFT<={args.slo_ttft}), "
+          f"slot utilization "
           f"{'-' if util is None else f'{util:.0%}'}, max queue depth "
           f"{s['queue_depth']['max']}")
+    if args.wall_clock:
+        tu = s["tick_utilization"]
+        tv = tu["value"]
+        print(f"[serve] tick utilization "
+              f"{'-' if tv is None else f'{tv:.1%}'} "
+              f"(device busy {tu['device_busy_s']:.2f}s of "
+              f"{tu['active_s']:.2f}s active)")
+        eng.close()
     req_s = s["requests"]
     if args.fault_rate is not None or args.deadline is not None:
         f = s["faults"]

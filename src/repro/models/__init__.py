@@ -32,6 +32,7 @@ from repro.models.lm import (  # noqa: F401
     init_params,
     param_count,
     prefill,
+    sample_tokens,
 )
 from repro.models.packing import (  # noqa: F401
     pack_model_params,

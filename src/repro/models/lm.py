@@ -639,6 +639,42 @@ def prefill(
 
 
 # ---------------------------------------------------------------------------
+# On-device sampling (overlapped serving keeps tokens as device arrays)
+# ---------------------------------------------------------------------------
+
+
+def sample_tokens(
+    logits: Array,
+    temperatures: Array,
+    uids: Array,
+    token_idxs: Array,
+    seed: int,
+) -> Array:
+    """Sample one next token per batch row ON DEVICE.
+
+    logits: (B, V) f32; temperatures: (B,) f32; uids / token_idxs: (B,)
+    int32.  Rows with ``temperature == 0`` decode greedily — ``jnp.argmax``
+    breaks ties at the first occurrence exactly like ``np.argmax``, so
+    greedy device sampling is bit-identical to the host path.  Rows with
+    ``temperature > 0`` draw from the temperature-scaled softmax using a
+    per-row stream keyed by ``(seed, uid, token_idx)`` (a jax PRNG
+    ``fold_in`` chain), so draws are reproducible for a given engine seed
+    no matter how the scheduler interleaves requests across ticks — the
+    same contract as the host sampler, though the two PRNGs draw different
+    (equally valid) samples.  Returns (B,) int32."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def draw(row, t, uid, idx):
+        k = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed), uid), idx)
+        safe_t = jnp.where(t > 0, t, 1.0)
+        return jax.random.categorical(k, row / safe_t).astype(jnp.int32)
+
+    sampled = jax.vmap(draw)(logits, temperatures, uids, token_idxs)
+    return jnp.where(temperatures > 0, sampled, greedy)
+
+
+# ---------------------------------------------------------------------------
 # DNF paired capture (unrolled; smoke/finetune scale)
 # ---------------------------------------------------------------------------
 

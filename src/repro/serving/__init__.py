@@ -2,9 +2,14 @@
 float numerics): engine core + pluggable schedulers + SLO metrics +
 fault injection/detection/recovery + paged KV pool with preemption and
 admission backpressure + multi-model fleet multiplexing over per-family
-ModelRunner seams."""
+ModelRunner seams + overlapped wall-clock dispatch (on-device sampling,
+background token delivery) behind the DeviceStream seam."""
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
 from repro.serving.fleet import FleetEngine  # noqa: F401
+from repro.serving.stream import (  # noqa: F401
+    DeviceStream,
+    OverlappedStream,
+)
 from repro.serving.runners import (  # noqa: F401
     DecoderRunner,
     EncDecRunner,

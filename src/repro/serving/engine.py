@@ -116,6 +116,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -137,6 +138,12 @@ from repro.serving.pages import (
 )
 from repro.serving.runners import ModelRunner, runner_for
 from repro.serving.scheduler import Scheduler, get_scheduler
+from repro.serving.stream import (
+    DeviceStream,
+    OverlappedStream,
+    Ticket,
+    TokenRec,
+)
 
 
 @dataclasses.dataclass
@@ -159,6 +166,9 @@ class Request:
     on_token: Optional[Callable[["Request", int], None]] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     prompt_pos: int = 0                 # prompt tokens consumed so far
+    dispatched: int = 0                 # tokens whose pass has been launched
+                                        # on device; > len(generated) while
+                                        # overlapped deliveries are in flight
     done: bool = False
     timed_out: bool = False             # cancelled by deadline expiry
     replay: Optional[List[int]] = None  # recompute stream after preemption:
@@ -201,7 +211,10 @@ class ServingEngine:
                  queue_watermark: Optional[int] = None,
                  page_watermarks: Tuple[float, float] = (0.85, 0.5),
                  degraded_max_new: Optional[int] = None,
-                 tenant_quota: Optional[int] = None):
+                 tenant_quota: Optional[int] = None,
+                 overlap: bool = False,
+                 inflight: int = 4,
+                 stream: Optional[DeviceStream] = None):
         self.mesh = mesh
         self.runner = runner if runner is not None else runner_for(mcfg)
         if quant.mode in ("abfp_packed", "abfp_fused"):
@@ -280,6 +293,32 @@ class ServingEngine:
             self.state = self.runner.shard_state(self.state, mesh)
         self.slots: List[Optional[Request]] = [None] * capacity
         self._next_input = np.zeros((capacity,), np.int32)
+
+        # -- overlapped runtime (serving.stream) ---------------------------
+        # overlap=False keeps the historical blocking tick: every pass
+        # host-syncs through a DeviceStream (inline fetch), and the
+        # simulated-clock path is bit-identical to the pre-stream engine.
+        # overlap=True (wall clock only) dispatches ahead: sampling runs
+        # ON DEVICE inside the jitted pass, the host tracks token COUNTS
+        # (`Request.dispatched`) without values, and a background worker
+        # resolves each pass's sampled tokens, fires streaming callbacks,
+        # and finalizes metrics while the next pass is already running.
+        self.overlap = bool(overlap)
+        if self.overlap and clock is None:
+            raise ValueError(
+                "overlap=True needs a wall clock (clock=time.perf_counter): "
+                "the simulated clock is defined by blocking passes")
+        self._perf = time.perf_counter  # injectable for deterministic tests
+        self._owns_stream = stream is None
+        self._stream: DeviceStream = stream if stream is not None else (
+            OverlappedStream(depth=inflight) if self.overlap
+            else DeviceStream())
+        self._delivered: deque = deque()    # finished by the worker,
+                                            # flushed into poll() returns
+        self._dev_next = None               # previous pass's device samples
+        self._ov_vals = np.zeros((capacity,), np.int32)
+        self._ov_mask = np.zeros((capacity,), bool)
+
         self.ticks = 0
         self.scheduler = get_scheduler(policy)
         self.metrics = ServingMetrics(capacity)
@@ -325,13 +364,27 @@ class ServingEngine:
         """(Re)build the jitted step/prefill/reset closures for the current
         mesh — called at init and again after a shard-drop re-shard.  The
         closures themselves come from the runner (the model-family seam);
-        the engine owns only jit + donation policy."""
+        the engine owns only jit + donation policy.
+
+        Step and prefill are built in their SAMPLED form (the runner wraps
+        the same core body either way): every pass returns ``(logits,
+        sampled, new_state)`` with next-token sampling on device, so the
+        blocking and overlapped paths share one closure and one compile —
+        the blocking path simply fetches logits and keeps the host
+        sampler, bit-identically to the pre-stream engine."""
         r = self.runner
-        self._jit_step = jax.jit(r.make_step(self.quant, self.mesh),
-                                 donate_argnums=(1,))
+        self._jit_step = jax.jit(
+            r.make_step(self.quant, self.mesh, seed=self.seed),
+            donate_argnums=(1,))
         # One compile per chunk bucket (shape-specialized), nothing more.
-        self._jit_prefill = jax.jit(r.make_prefill(self.quant, self.mesh),
-                                    donate_argnums=(1,))
+        self._jit_prefill = jax.jit(
+            r.make_prefill(self.quant, self.mesh, seed=self.seed),
+            donate_argnums=(1,))
+        # Per-shape warmed executables + warmup bookkeeping: a reshard
+        # invalidates every compiled shape (new mesh, new shardings).
+        self._cached_pref = {}
+        self._warmed_shapes = set()
+        self._dev_next = None
         # Compile-once slot reset: the slot index is data, so admission
         # under churn costs one fused scatter pass instead of a host-side
         # state rebuild that scales with model size.
@@ -342,6 +395,175 @@ class ServingEngine:
         if r.needs_admission:
             self._jit_admit = jax.jit(r.make_admit(self.quant, self.mesh),
                                       donate_argnums=(1,))
+
+    # -- warmed executables -----------------------------------------------
+    def _executable(self, shape_key: Tuple, args: Tuple):
+        """The ``_cached_pref`` map: one AOT-compiled executable per jit
+        shape — ``("decode",)`` or ``("prefill", bucket)`` — compiled (via
+        ``jit(...).lower(args).compile()``) OUTSIDE the timed region, so a
+        cold bucket's compile never lands in a straggler sample or a
+        utilization span.  Returns ``(fn, warmup)``; ``warmup`` marks the
+        first EXECUTION of this shape, which the caller excludes from the
+        straggler model (first-run dispatch overhead is not a straggler
+        signal — see StragglerMonitor)."""
+        fn = self._cached_pref.get(shape_key)
+        if fn is None:
+            base = (self._jit_step if shape_key[0] == "decode"
+                    else self._jit_prefill)
+            try:
+                fn = base.lower(*args).compile()
+            except Exception:
+                # AOT lowering is best-effort (exotic runner states);
+                # falling back to plain jit dispatch keeps serving correct,
+                # at worst paying compile inside the first timed pass.
+                fn = base
+            self._cached_pref[shape_key] = fn
+        warm = shape_key not in self._warmed_shapes
+        self._warmed_shapes.add(shape_key)
+        return fn, warm
+
+    def warmup(self):
+        """Pre-compile the decode tick and every prefill bucket so no
+        compile happens once traffic is live (benchmarks call this before
+        the timed window; a cold engine self-warms lazily through
+        ``_executable`` instead)."""
+        self._executable(("decode",), self._decode_proto())
+        if self.chunked:
+            for bucket in self.prefill_chunks:
+                self._executable(("prefill", bucket),
+                                 self._prefill_proto(bucket))
+        # Pre-compiling must not mark shapes as executed: the first REAL
+        # pass per shape still carries first-dispatch overhead.
+        self._warmed_shapes.clear()
+
+    def _call(self, shape_key: Tuple, args: Tuple):
+        """Dispatch one pass through the warmed-executable cache.  If the
+        AOT executable rejects the concrete arguments (e.g. a sharding
+        lowered from a host prototype disagreeing with a live device
+        array), fall back to plain jit dispatch for that shape — correct
+        either way, the cache is an optimization."""
+        fn, warm = self._executable(shape_key, args)
+        try:
+            return fn(*args), warm
+        except Exception:
+            base = (self._jit_step if shape_key[0] == "decode"
+                    else self._jit_prefill)
+            if fn is base:
+                raise
+            self._cached_pref[shape_key] = base
+            return base(*args), warm
+
+    # -- dispatch inputs --------------------------------------------------
+    def _samp_arrays(self):
+        """Per-slot sampling inputs for the on-device sampler: temperature,
+        uid, and NEXT token index (``dispatched``, which in overlap mode
+        runs ahead of ``len(generated)``) — zeros for empty slots."""
+        temps = np.zeros((self.capacity,), np.float32)
+        uids = np.zeros((self.capacity,), np.int32)
+        idxs = np.zeros((self.capacity,), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is not None:
+                temps[i] = req.temperature
+                uids[i] = req.uid & 0x7FFFFFFF
+                idxs[i] = req.dispatched
+        return temps, uids, idxs
+
+    def _decode_proto(self) -> Tuple:
+        """Zero-valued decode-tick arguments (lowering prototypes only)."""
+        z = np.zeros
+        c = self.capacity
+        return (self.params, self.state, z((c,), np.int32), z((c,), np.int32),
+                z((c,), bool), self.key, z((c,), np.float32),
+                z((c,), np.int32), z((c,), np.int32))
+
+    def _prefill_proto(self, bucket: int) -> Tuple:
+        """Zero-valued prefill-pass arguments for one chunk bucket."""
+        z = np.zeros
+        c = self.capacity
+        return (self.params, self.state, z((c, bucket), np.int32),
+                z((c,), np.int32), z((c,), np.int32), z((c,), bool),
+                self.key, z((c,), np.float32), z((c,), np.int32),
+                z((c,), np.int32))
+
+    def _set_next(self, i: int, val: int):
+        """Host-known next input for slot i.  The blocking path reads it
+        from ``_next_input``; the overlapped path additionally records it
+        as an OVERRIDE (``ov_mask``) because the base decode input there is
+        the previous pass's device sample, which a host prompt feed must
+        shadow."""
+        self._next_input[i] = int(val)
+        if self.overlap:
+            self._ov_vals[i] = int(val)
+            self._ov_mask[i] = True
+
+    def _clear_ov(self, i: int):
+        self._ov_vals[i] = 0
+        self._ov_mask[i] = False
+
+    # -- delivery (the stream's consumer side) ----------------------------
+    def _account_dispatch(self, i: int, req: Request) -> TokenRec:
+        """Host bookkeeping for one on-device sampled token the overlapped
+        path has NOT seen yet: bump the dispatched count and, when it hits
+        the request's limit, free the slot immediately — completion is a
+        COUNT property, so the next admission can reuse the slot while the
+        final token is still in flight.  (Device passes execute in
+        dispatch order, so pages released here cannot be overwritten
+        before this pass's writes land.)"""
+        req.dispatched += 1
+        limit = req.max_new_tokens
+        if self.paged and self._slot_cap[i] is not None:
+            limit = min(limit, self._slot_cap[i])
+        finishing = req.dispatched >= limit
+        if finishing:
+            self.slots[i] = None
+            self._release_slot(i, req.tenant)
+        return TokenRec(slot=i, req=req, finishing=finishing,
+                        corrupted=self._fault_dirty)
+
+    def _deliver_ticket(self, ticket: Ticket):
+        """Resolve one dispatched pass (runs on the stream's worker thread
+        in overlap mode): fetch the (B,) sampled tokens — the ONLY
+        device->host transfer on the overlapped hot path — append values,
+        fire streaming callbacks, finalize metrics, and feed the
+        straggler/utilization gauges."""
+        vals = self._stream.fetch(ticket.sampled)
+        done = self._perf()
+        self.metrics.on_device_span(ticket.t0, done)
+        if not ticket.warmup:
+            self.straggler.observe(done - ticket.t0)
+        for rec in ticket.recs:
+            req = rec.req
+            nxt = int(vals[rec.slot])
+            req.generated.append(nxt)
+            self.metrics.on_token(req.uid, ticket.now)
+            if rec.corrupted:
+                self.metrics.on_corrupted(req.uid)
+            if req.on_token is not None:
+                req.on_token(req, nxt)
+            if rec.finishing:
+                req.done = True
+                self.metrics.on_finish(req.uid, ticket.now)
+                self._delivered.append(req)
+
+    def _drain_delivered(self) -> List[Request]:
+        out: List[Request] = []
+        while self._delivered:
+            out.append(self._delivered.popleft())
+        return out
+
+    def sync(self):
+        """Wait until every in-flight pass has delivered its tokens
+        (no-op on the blocking path).  Called internally before anything
+        that must observe COMPLETE token streams: preemption replay
+        snapshots, deadline expiry, fault requeues, reshards."""
+        self._stream.sync()
+
+    def close(self):
+        """Shut down the background delivery worker.  Safe on any engine;
+        an engine sharing a fleet-owned stream leaves it to the fleet."""
+        if self._owns_stream:
+            self._stream.sync()
+            self._stream.close()
 
     # -- clock ----------------------------------------------------------------
     def _tick_clock(self):
@@ -446,6 +668,7 @@ class ServingEngine:
         for i, slot in enumerate(self.slots):
             if slot is None:
                 self._reset_slot(i)
+                self._clear_ov(i)   # stale override from a past occupant
                 self.slots[i] = req
                 if req.arrival_time is None:
                     req.arrival_time = self.now
@@ -483,7 +706,7 @@ class ServingEngine:
                         self._attach_prefix(i, req)
                 else:
                     # Legacy prefill-in-decode: one prompt token per tick.
-                    self._next_input[i] = toks[0]
+                    self._set_next(i, toks[0])
                     req.prompt_pos = 1
                 return True
         return False
@@ -586,6 +809,7 @@ class ServingEngine:
         else:
             nxt = int(np.argmax(logits_row))
         req.generated.append(nxt)
+        req.dispatched = len(req.generated)
         self._next_input[i] = nxt
         self.metrics.on_token(req.uid, self.now)
         if self._fault_dirty:
@@ -625,9 +849,11 @@ class ServingEngine:
         token already streamed so the resume prefills the identical stream
         (bit-identical continuation in float mode — re-prefilling the same
         tokens rebuilds the same cache the decode ticks had built)."""
+        self.sync()     # the replay snapshot needs every in-flight token
         req = self.slots[i]
         self.slots[i] = None
         self._next_input[i] = 0
+        self._clear_ov(i)
         self._release_slot(i, req.tenant)
         req.replay = list(req.prompt) + list(req.generated)
         req.prompt_pos = 0
@@ -824,6 +1050,7 @@ class ServingEngine:
         its healthy baseline; with recovery on, repair what was found
         (re-quantize drifted tiles, remap stuck columns, re-shard on a
         lost-shard health signal + requeue its in-flight requests)."""
+        self.sync()     # requeues read complete streams + corruption marks
         if self._lost_shard is not None and self.recovery:
             self._reshard_and_requeue()
             return
@@ -871,9 +1098,11 @@ class ServingEngine:
                 continue
             self.slots[i] = None
             self._next_input[i] = 0
+            self._clear_ov(i)
             self._release_slot(i, req.tenant)
             req.prompt_pos = 0
             req.generated.clear()
+            req.dispatched = 0
             req.replay = None       # corrupted stream: restart from prompt
             self.metrics.on_requeue(req.uid)
             self.scheduler.requeue(req)
@@ -931,9 +1160,12 @@ class ServingEngine:
         inflight = [r for r in self.slots if r is not None]
         self.slots = [None] * self.capacity
         self._next_input[:] = 0
+        self._ov_vals[:] = 0
+        self._ov_mask[:] = False
         for req in inflight:
             req.prompt_pos = 0
             req.generated.clear()
+            req.dispatched = 0
             req.replay = None
             self.metrics.on_requeue(req.uid)
             self.scheduler.requeue(req)
@@ -947,6 +1179,8 @@ class ServingEngine:
         # path never accumulates finished Request objects.
         self._just_finished = []
         if self._has_deadlines:
+            if self.overlap:
+                self.sync()     # cancel only COMPLETE streams
             self._expire_slots()
             self._just_finished.extend(self._expire_queue())
         if self.fault_plan is not None:
@@ -982,7 +1216,7 @@ class ServingEngine:
                 # smallest-bucket chunk pass.
                 for i in prefilling:
                     req = self.slots[i]
-                    self._next_input[i] = self._feed(req)[req.prompt_pos]
+                    self._set_next(i, self._feed(req)[req.prompt_pos])
                     req.prompt_pos += 1
                 self._decode_tick()
             else:
@@ -992,7 +1226,13 @@ class ServingEngine:
 
     def _prefill_pass(self, live: List[int]):
         """One bucketed prefill pass: prompt chunks for prefilling slots,
-        a single next token for decoding slots, no-op for empty slots."""
+        a single next token for decoding slots, no-op for empty slots.
+
+        Decoding slots riding along take their input from ``_next_input``
+        on the blocking path, or from the previous pass's on-device sample
+        (``rider_mask``) on the overlapped path — unless a host override is
+        pending (preemption zeroing, legacy feeds), which wins either way.
+        """
         cap = self._chunk_cap()
         need = np.zeros((self.capacity,), np.int32)
         for i in live:
@@ -1002,28 +1242,72 @@ class ServingEngine:
         bucket = next(c for c in self.prefill_chunks if c >= need.max())
 
         tokens = np.zeros((self.capacity, bucket), np.int32)
+        riders = np.zeros((self.capacity,), bool)
         for i in live:
             req = self.slots[i]
             toks = self._feed(req)
             if req.prompt_pos < len(toks):
                 n = int(need[i])
                 tokens[i, :n] = toks[req.prompt_pos:req.prompt_pos + n]
+            elif (self.overlap and self._dev_next is not None
+                    and not self._ov_mask[i]):
+                riders[i] = True    # input = previous device sample
             else:
                 tokens[i, 0] = self._next_input[i]
         if self.paged:
             self.state["page_table"] = jnp.asarray(self._table)
+        temps, uids, idxs = self._samp_arrays()
         self.key, sub = jax.random.split(self.key)
-        t0 = time.perf_counter()
-        logits, self.state = self._jit_prefill(
-            self.params, self.state, jnp.asarray(tokens),
-            jnp.asarray(need), sub)
-        logits = np.asarray(logits, np.float32)     # host sync point
-        self.straggler.observe(time.perf_counter() - t0)
-        self._tick_clock()
+        rv = (self._dev_next if self._dev_next is not None
+              else np.zeros((self.capacity,), np.int32))
+        args = (self.params, self.state, tokens, need, rv, riders, sub,
+                temps, uids, idxs)
+        t0 = self._perf()
+        self.metrics.window_open(t0)
+        (logits, sampled, self.state), warm = self._call(
+            ("prefill", bucket), args)
+        self._dev_next = sampled
+        self._ov_vals[:] = 0
+        self._ov_mask[:] = False
 
+        # Recipients: slots whose prompt completes this pass, or decode
+        # riders — exactly the slots _record would have sampled for.
+        recipients = [
+            i for i in live
+            if (len(self._feed(self.slots[i])) - self.slots[i].prompt_pos
+                <= int(need[i]))]
+
+        if not self.overlap:
+            lg = None
+            if recipients:
+                lg = self._stream.fetch(logits, np.float32)  # host sync
+                done = self._perf()
+                self.metrics.on_device_span(t0, done)
+                if not warm:
+                    self.straggler.observe(done - t0)
+            self._tick_clock()
+            if self.paged:
+                for i in live:
+                    self._slot_len[i] += int(need[i])
+            for i in live:
+                req = self.slots[i]
+                toks = self._feed(req)
+                if req.prompt_pos < len(toks):
+                    req.prompt_pos += int(need[i])
+                    if self.prefix_enabled:
+                        self._register_prefix(i, req)
+                    if req.prompt_pos < len(toks):
+                        continue        # still prefilling; logits unused
+                # Prompt just completed (logits are at its last prompt
+                # token) or the slot was decoding: sample either way.
+                self._record(i, req, lg[i])
+            return
+
+        self._tick_clock()
         if self.paged:
             for i in live:
                 self._slot_len[i] += int(need[i])
+        recs: List[TokenRec] = []
         for i in live:
             req = self.slots[i]
             toks = self._feed(req)
@@ -1032,36 +1316,75 @@ class ServingEngine:
                 if self.prefix_enabled:
                     self._register_prefix(i, req)
                 if req.prompt_pos < len(toks):
-                    continue                # still prefilling; logits unused
-            # Prompt just completed (logits are at its last prompt token) or
-            # the slot was decoding: sample the next token either way.
-            self._record(i, req, logits[i])
+                    continue
+            recs.append(self._account_dispatch(i, req))
+        self._stream.submit(Ticket(engine=self, t0=t0, warmup=warm,
+                                   sampled=sampled, recs=recs, now=self.now))
 
     def _decode_tick(self):
         if self.paged:
             self.state["page_table"] = jnp.asarray(self._table)
         fed = [i for i, s in enumerate(self.slots) if s is not None]
-        token = jnp.asarray(self._next_input)
+        token = (self._dev_next
+                 if self.overlap and self._dev_next is not None
+                 else self._next_input)
+        ov_vals, ov_mask = self._ov_vals.copy(), self._ov_mask.copy()
+        temps, uids, idxs = self._samp_arrays()
         self.key, sub = jax.random.split(self.key)
-        t0 = time.perf_counter()
-        logits, self.state = self._jit_step(self.params, self.state, token, sub)
-        logits = np.asarray(logits, np.float32)     # host sync point
-        self.straggler.observe(time.perf_counter() - t0)
-        self._tick_clock()
+        args = (self.params, self.state, token, ov_vals, ov_mask, sub,
+                temps, uids, idxs)
+        t0 = self._perf()
+        self.metrics.window_open(t0)
+        (logits, sampled, self.state), warm = self._call(("decode",), args)
+        self._dev_next = sampled
+        self._ov_vals[:] = 0
+        self._ov_mask[:] = False
 
+        recipients = [i for i in fed
+                      if self.slots[i].prompt_pos
+                      >= len(self._feed(self.slots[i]))]
+
+        if not self.overlap:
+            lg = None
+            if recipients:
+                lg = self._stream.fetch(logits, np.float32)  # host sync
+                done = self._perf()
+                self.metrics.on_device_span(t0, done)
+                if not warm:
+                    self.straggler.observe(done - t0)
+            self._tick_clock()
+            if self.paged:
+                for i in fed:
+                    self._slot_len[i] += 1
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                toks = self._feed(req)
+                if req.prompt_pos < len(toks):
+                    # legacy prefill-in-decode: feed the next prompt token
+                    self._set_next(i, toks[req.prompt_pos])
+                    req.prompt_pos += 1
+                    continue
+                self._record(i, req, lg[i])
+            return
+
+        self._tick_clock()
         if self.paged:
             for i in fed:
                 self._slot_len[i] += 1
-        for i, req in enumerate(self.slots):
+        recs: List[TokenRec] = []
+        for i in list(fed):
+            req = self.slots[i]
             if req is None:
                 continue
             toks = self._feed(req)
             if req.prompt_pos < len(toks):
-                # legacy prefill-in-decode: feed the next prompt token
-                self._next_input[i] = toks[req.prompt_pos]
+                self._set_next(i, toks[req.prompt_pos])
                 req.prompt_pos += 1
                 continue
-            self._record(i, req, logits[i])
+            recs.append(self._account_dispatch(i, req))
+        self._stream.submit(Ticket(engine=self, t0=t0, warmup=warm,
+                                   sampled=sampled, recs=recs, now=self.now))
 
     # -- open-loop API ----------------------------------------------------
     def poll(self) -> List[Request]:
@@ -1077,17 +1400,28 @@ class ServingEngine:
             self.now = self._clock()
         out = self._returned
         self._returned = []
+        out.extend(self._drain_delivered())
         self._admit_arrived()
         if all(s is None for s in self.slots):
+            if self._stream.pending():
+                # Overlap: everything dispatched, nothing left to feed —
+                # wait for in-flight deliveries (they may finish requests
+                # or fire callbacks that submit new ones).
+                self._stream.sync()
+                out.extend(self._drain_delivered())
+            self.metrics.window_close(self._perf())
             nxt = self.scheduler.next_arrival()
             if nxt is None:
                 return out                  # fully drained
             if self._clock is not None:
                 # Real time hasn't caught up to the next arrival: nap
                 # (capped) instead of letting drain() busy-spin a core
-                # through the inter-arrival gap.
+                # through the inter-arrival gap.  Re-sync the clock after
+                # the nap — otherwise the next admission pass stamps
+                # queue-delay against a ``now`` from before the sleep.
                 if nxt > self.now:
                     time.sleep(min(nxt - self.now, 0.01))
+                    self.now = self._clock()
                 return out
             self.now = max(self.now, nxt)
             self._admit_arrived()
@@ -1095,12 +1429,15 @@ class ServingEngine:
         return out + list(self._just_finished)
 
     def drain(self) -> List[Request]:
-        """Poll until the queue, every slot, and the returned buffer are
-        empty; returns finished requests in completion order."""
+        """Poll until the queue, every slot, the in-flight stream, and the
+        returned buffer are empty; returns finished requests in completion
+        order."""
         finished: List[Request] = []
         while (len(self.scheduler)
                or any(s is not None for s in self.slots)
-               or self._returned):
+               or self._returned
+               or self._stream.pending()
+               or self._delivered):
             finished.extend(self.poll())
         return finished
 

@@ -42,6 +42,7 @@ from typing import Dict, List, Optional
 
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.runners import runner_for
+from repro.serving.stream import OverlappedStream
 
 
 def _split_capacity(total: int, names: List[str],
@@ -111,6 +112,16 @@ class FleetEngine(ServingEngine):
                     pool_split[n] = max(1, share)
                     acc += pool_split[n]
 
+        # Overlapped fleets share ONE delivery pipeline: a single stream
+        # (one worker, one dispatch-ahead bound) serves every lane, so the
+        # board-level in-flight depth is bounded fleet-wide rather than
+        # per-lane.
+        self._shared_stream = None
+        if lane_kwargs.get("overlap"):
+            depth = lane_kwargs.pop("inflight", 4)
+            self._shared_stream = OverlappedStream(depth=depth)
+            lane_kwargs.setdefault("stream", self._shared_stream)
+
         self.lanes: Dict[str, ServingEngine] = {}
         for name in names:
             p, cfg, runner = resolved[name]
@@ -120,8 +131,8 @@ class FleetEngine(ServingEngine):
                 pool_pages=pool_split[name],
                 **lane_kwargs)
         self.capacity = int(capacity)
-        self.now = 0.0
-        self._clock = None
+        self._clock = lane_kwargs.get("clock")
+        self.now = self._clock() if self._clock is not None else 0.0
         self._rr = 0                    # round-robin cursor over lanes
 
     # -- clock sync -------------------------------------------------------
@@ -147,11 +158,13 @@ class FleetEngine(ServingEngine):
 
     @staticmethod
     def _has_work(lane: ServingEngine) -> bool:
-        """Work servable NOW: occupied slots, arrived queue entries, or
-        finalized-outside-step requests awaiting a poll."""
+        """Work servable NOW: occupied slots, arrived queue entries,
+        finalized-outside-step requests awaiting a poll, or overlapped
+        deliveries not yet handed back."""
         return (any(s is not None for s in lane.slots)
                 or lane.scheduler.pending(lane.now) > 0
-                or bool(lane._returned))
+                or bool(lane._returned)
+                or bool(lane._delivered))
 
     # -- open-loop API ----------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -171,6 +184,14 @@ class FleetEngine(ServingEngine):
             self._enter(lane)
         busy = [n for n in names if self._has_work(self.lanes[n])]
         if not busy:
+            if any(l._stream.pending() for l in self.lanes.values()):
+                # Everything dispatched, nothing feedable: wait for the
+                # shared pipeline to deliver, then hand the tokens back.
+                out: List[Request] = []
+                for lane in self.lanes.values():
+                    lane.sync()
+                    out.extend(lane._drain_delivered())
+                return out
             nxts = [self.lanes[n].scheduler.next_arrival() for n in names]
             nxts = [t for t in nxts if t is not None]
             if nxts:
@@ -195,9 +216,22 @@ class FleetEngine(ServingEngine):
         while any(len(l.scheduler)
                   or any(s is not None for s in l.slots)
                   or l._returned
+                  or l._stream.pending()
+                  or l._delivered
                   for l in self.lanes.values()):
             finished.extend(self.poll())
         return finished
+
+    def sync(self) -> None:
+        for lane in self.lanes.values():
+            lane.sync()
+
+    def close(self) -> None:
+        """Shut down the fleet's shared delivery worker (lanes never own
+        the stream in fleet mode, so this is the only close point)."""
+        if self._shared_stream is not None:
+            self._shared_stream.sync()
+            self._shared_stream.close()
 
     # ``run()`` is inherited: submit-all + drain works unchanged because
     # both are overridden here.

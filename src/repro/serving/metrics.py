@@ -128,6 +128,13 @@ class ServingMetrics:
             "tiles_requantized": 0,
             "reshards": 0,
         }
+        # Device-occupancy gauge (wall-clock host perf timestamps, NOT the
+        # engine clock): merged union of [dispatch, delivery-done] spans
+        # over the active windows the engine was serving in.
+        self._device_busy = 0.0
+        self._busy_mark: Optional[float] = None    # end of last merged span
+        self._active = 0.0
+        self._active_since: Optional[float] = None
 
     # -- event hooks (engine-facing) --------------------------------------
     def _req(self, uid: int) -> RequestMetrics:
@@ -235,6 +242,48 @@ class ServingMetrics:
     def on_repair(self, action: str, n: int = 1) -> None:
         """``action`` in {cols_remapped, tiles_requantized, reshards}."""
         self.faults[action] += int(n)
+
+    def on_device_span(self, start: float, end: float) -> None:
+        """One device pass's [dispatch, delivery-done] host-clock span.
+        Spans from overlapped passes interleave; busy time is the MERGED
+        union (overlap counted once), so ``tick_utilization`` reads 1.0
+        when the device never waits on the host between passes."""
+        if end <= start:
+            return
+        if self._busy_mark is None or start >= self._busy_mark:
+            self._device_busy += end - start
+        elif end > self._busy_mark:
+            self._device_busy += end - self._busy_mark
+        else:
+            return                      # fully inside an earlier span
+        self._busy_mark = end
+
+    def window_open(self, t: float) -> None:
+        """The engine has work in flight from host-clock time ``t`` (no-op
+        while a window is already open).  Idle gaps between windows —
+        waiting on arrivals — don't count against device utilization."""
+        if self._active_since is None:
+            self._active_since = t
+
+    def window_close(self, t: float) -> None:
+        """The engine went idle: close the active window."""
+        if self._active_since is not None:
+            self._active += max(0.0, t - self._active_since)
+            self._active_since = None
+
+    def tick_utilization(self) -> Dict:
+        """Device-busy over engine-active wall time (see on_device_span).
+        A still-open window is closed virtually at the busy mark so a
+        mid-run read doesn't count not-yet-delivered host time as idle."""
+        active = self._active
+        if self._active_since is not None and self._busy_mark is not None:
+            active += max(0.0, self._busy_mark - self._active_since)
+        value = (self._device_busy / active) if active > 0 else None
+        return {
+            "device_busy_s": self._device_busy,
+            "active_s": active,
+            "value": value,
+        }
 
     def on_tick(self, now: float, live: int, capacity: int,
                 queue_depth: int, *, pool=None, degraded: bool = False
@@ -360,6 +409,7 @@ class ServingMetrics:
             "queue_delay": percentile_summary(
                 (r.queue_delay for r in fin), percentiles),
             "ticks": self.ticks,
+            "tick_utilization": self.tick_utilization(),
             "utilization": {
                 "mean": float(np.mean(util)) if util else None,
                 "min": float(np.min(util)) if util else None,

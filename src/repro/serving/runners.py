@@ -46,6 +46,7 @@ from repro.models import (
     encode_cross_kv,
     init_decode_state,
     prefill,
+    sample_tokens,
 )
 from repro.models.layers import Numerics
 from repro.serving.pages import pages_needed
@@ -107,7 +108,31 @@ class ModelRunner:
         return True
 
     # -- jit-ready closures (the engine jits these verbatim) ---------------
-    def make_step(self, quant, mesh):
+    @staticmethod
+    def _replicated(x, mesh):
+        """Pin a sampled-token array to a canonical replicated sharding so
+        the warmed executables accept it back as the next pass's input
+        (the engine feeds device samples straight into the next dispatch
+        without ever fetching them)."""
+        if mesh is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec()))
+
+    def _step_core(self, params, state, token, key, quant, mesh):
+        """The model-family decode-tick body shared by BOTH closure forms
+        below (legacy logits-out and sampled); overriding this is how a
+        family changes its step without touching sampling."""
+        nx = Numerics(quant, key, mesh=mesh)
+        return decode_step(params, state, token, self.mcfg, nx)
+
+    def _prefill_core(self, params, state, tokens, n_tokens, key, quant,
+                      mesh):
+        nx = Numerics(quant, key, mesh=mesh)
+        return prefill(params, state, tokens, n_tokens, self.mcfg, nx)
+
+    def make_step(self, quant, mesh, seed=None):
         """Build the jit-ready decode-tick closure.
 
         ``quant`` selects the whole numerics stack inside the closure via
@@ -117,21 +142,59 @@ class ModelRunner:
         of ``kernels.abfp_decode_fused``; the closure itself is identical
         across modes, so the engine jits exactly one step function either
         way.
-        """
-        mcfg = self.mcfg
 
-        def _step(params, state, token, key):
-            nx = Numerics(quant, key, mesh=mesh)
-            return decode_step(params, state, token, mcfg, nx)
+        With ``seed=None`` (the legacy form external callers use) the
+        closure is ``(params, state, token, key) -> (logits, new_state)``.
+        With an integer seed the engine gets the SAMPLED form the serving
+        tick runs: ``(params, state, token, ov_vals, ov_mask, key, temps,
+        uids, idxs) -> (logits, sampled, new_state)`` — the next token is
+        drawn on device (``models.sample_tokens``) so the overlapped
+        runtime never syncs logits to the host, and ``ov_mask`` lets the
+        host override per-slot inputs (prompt feeds) while every other
+        slot consumes the previous pass's device sample.  Both forms wrap
+        the same ``_step_core`` body, so the logits math is identical.
+        """
+        if seed is None:
+            def _step(params, state, token, key):
+                return self._step_core(params, state, token, key, quant,
+                                       mesh)
+
+            return _step
+
+        def _step(params, state, token, ov_vals, ov_mask, key, temps, uids,
+                  idxs):
+            tok = jnp.where(ov_mask, ov_vals, token)
+            logits, new_state = self._step_core(params, state, tok, key,
+                                                quant, mesh)
+            nxt = self._replicated(
+                sample_tokens(logits, temps, uids, idxs, seed), mesh)
+            return logits, nxt, new_state
 
         return _step
 
-    def make_prefill(self, quant, mesh):
-        mcfg = self.mcfg
+    def make_prefill(self, quant, mesh, seed=None):
+        """Legacy form (``seed=None``): ``(params, state, tokens, n_tokens,
+        key) -> (logits, new_state)``.  Sampled form: adds ``riders`` /
+        ``rider_mask`` — decode slots riding along in a chunk pass take
+        their single input token from the previous pass's on-device sample
+        instead of a host value — and returns ``(logits, sampled,
+        new_state)`` like the sampled step."""
+        if seed is None:
+            def _prefill(params, state, tokens, n_tokens, key):
+                return self._prefill_core(params, state, tokens, n_tokens,
+                                          key, quant, mesh)
 
-        def _prefill(params, state, tokens, n_tokens, key):
-            nx = Numerics(quant, key, mesh=mesh)
-            return prefill(params, state, tokens, n_tokens, mcfg, nx)
+            return _prefill
+
+        def _prefill(params, state, tokens, n_tokens, riders, rider_mask,
+                     key, temps, uids, idxs):
+            first = jnp.where(rider_mask, riders, tokens[:, 0])
+            toks = tokens.at[:, 0].set(first)
+            logits, new_state = self._prefill_core(
+                params, state, toks, n_tokens, key, quant, mesh)
+            nxt = self._replicated(
+                sample_tokens(logits, temps, uids, idxs, seed), mesh)
+            return logits, nxt, new_state
 
         return _prefill
 
@@ -280,31 +343,22 @@ class EncDecRunner(ModelRunner):
         enc_kv = [(e["k"], e["v"]) for e in enc]
         return rest, enc, enc_kv
 
-    def make_step(self, quant, mesh):
-        mcfg = self.mcfg
+    def _step_core(self, params, state, token, key, quant, mesh):
+        rest, enc, enc_kv = self._split_enc(state)
+        nx = Numerics(quant, key, mesh=mesh)
+        logits, new_state = decode_step(params, rest, token, self.mcfg, nx,
+                                        enc_kv=enc_kv)
+        new_state["enc"] = enc
+        return logits, new_state
 
-        def _step(params, state, token, key):
-            rest, enc, enc_kv = self._split_enc(state)
-            nx = Numerics(quant, key, mesh=mesh)
-            logits, new_state = decode_step(params, rest, token, mcfg, nx,
-                                            enc_kv=enc_kv)
-            new_state["enc"] = enc
-            return logits, new_state
-
-        return _step
-
-    def make_prefill(self, quant, mesh):
-        mcfg = self.mcfg
-
-        def _prefill(params, state, tokens, n_tokens, key):
-            rest, enc, enc_kv = self._split_enc(state)
-            nx = Numerics(quant, key, mesh=mesh)
-            logits, new_state = prefill(params, rest, tokens, n_tokens,
-                                        mcfg, nx, enc_kv=enc_kv)
-            new_state["enc"] = enc
-            return logits, new_state
-
-        return _prefill
+    def _prefill_core(self, params, state, tokens, n_tokens, key, quant,
+                      mesh):
+        rest, enc, enc_kv = self._split_enc(state)
+        nx = Numerics(quant, key, mesh=mesh)
+        logits, new_state = prefill(params, rest, tokens, n_tokens,
+                                    self.mcfg, nx, enc_kv=enc_kv)
+        new_state["enc"] = enc
+        return logits, new_state
 
     def make_admit(self, quant, mesh):
         """One encoder pass for slot ``i``: features (enc_len, d_model) ->
